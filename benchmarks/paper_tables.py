@@ -1,0 +1,223 @@
+"""Benchmarks reproducing the paper's tables (I, III, IV, V, VI, VII, VIII).
+
+Each function returns (rows, summary) and prints a markdown table; run.py
+aggregates them into bench_output.txt / EXPERIMENTS.md §Repro.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import (ALLOCATION_SCHEMES, BoardModel, CoreConfig,
+                        DualCoreConfig, P128_9, DUAL_BASELINE, DUAL_MBV1,
+                        DUAL_MBV2, DUAL_SQZ, DUAL_MULTI, ResourceBudget,
+                        best_schedule, build_schedule, core_area,
+                        dual_core_area, evaluate_config, harmonic_mean,
+                        pe_structure_lut_equiv, search,
+                        simulate_single_core, graph_latency_report)
+from repro.models.zoo import get_graph
+
+BOARD = BoardModel()
+MODELS = ("mobilenet_v1", "mobilenet_v2", "squeezenet")
+
+TABLE_IV_BOARD = {"mobilenet_v1": 755_857, "mobilenet_v2": 637_551,
+                  "squeezenet": 447_457}
+TABLE_V_PAPER = {   # load-balance-heuristic column
+    ("mobilenet_v1", "C(128,8)+P(64,9)"): 304.3,
+    ("mobilenet_v1", "C(180,8)+P(32,9)"): 320.2,
+    ("mobilenet_v1", "C(112,9)+P(72,8)"): 269.9,
+    ("mobilenet_v2", "C(128,8)+P(64,9)"): 427.6,
+    ("mobilenet_v2", "C(180,8)+P(32,9)"): 384.9,
+    ("mobilenet_v2", "C(112,9)+P(72,8)"): 371.1,
+    ("squeezenet", "C(128,8)+P(64,9)"): 529.9,
+    ("squeezenet", "C(180,8)+P(32,9)"): 520.4,
+    ("squeezenet", "C(112,9)+P(72,8)"): 451.3,
+}
+TABLE_VI_PAPER = {  # (config, fps, baseline fps)
+    "mobilenet_v1": (DUAL_MBV1, 358.4, 264.6),
+    "mobilenet_v2": (DUAL_MBV2, 438.4, 313.4),
+    "squeezenet": (DUAL_SQZ, 534.7, 446.9),
+}
+TABLE_VII_PAPER = {  # multi-CNN workload, C(128,10)+P(32,12) column
+    "mobilenet_v1": 326.2, "mobilenet_v2": 437.8, "squeezenet": 526.6,
+    "average": 413.9,
+}
+
+
+def table_i_iii_area():
+    print("\n## Table I / III — resource & equivalent-area model")
+    rows = []
+    p = pe_structure_lut_equiv(CoreConfig("p", 64, 9))
+    c = pe_structure_lut_equiv(CoreConfig("c", 128, 8))
+    for name, ours, paper in [
+            ("P(64,9) line buffer", p["line_buffer"], 39_868),
+            ("P(64,9) multipliers", p["multipliers"], 40_896),
+            ("P(64,9) adders", p["adders"], 17_859),
+            ("P(64,9) total", p["total"], 98_623),
+            ("C(128,8) multipliers", c["multipliers"], 72_704),
+            ("C(128,8) adders", c["adders"], 31_749),
+            ("C(128,8) total", c["total"], 104_453)]:
+        err = (ours - paper) / paper
+        rows.append((name, ours, paper, err))
+        print(f"{name:<24} ours={ours:>9,.0f} paper={paper:>9,} "
+              f"({err:+.2%})")
+    a = core_area(P128_9, include_invariant=True)
+    for name, ours, paper in [("P(128,9) LUT", a.lut, 137_149),
+                              ("P(128,9) FF", a.ff, 234_046),
+                              ("P(128,9) DSP", a.dsp, 577),
+                              ("P(128,9) BRAM18K", a.bram18k, 237)]:
+        err = (ours - paper) / paper
+        rows.append((name, ours, paper, err))
+        print(f"{name:<24} ours={ours:>9,} paper={paper:>9,} ({err:+.2%})")
+    return rows
+
+
+def table_iv_simulator():
+    print("\n## Table IV — cycle-accurate simulator vs board cycles")
+    rows = []
+    for m in MODELS:
+        g = get_graph(m)
+        sim = simulate_single_core(g, P128_9, BOARD)
+        board = TABLE_IV_BOARD[m]
+        err = (sim.cycles - board) / board
+        fps = BOARD.fps(sim.cycles)
+        rows.append((m, sim.cycles, board, err, fps))
+        print(f"{m:<14} sim={sim.cycles:>9,}  board={board:>9,} "
+              f"({err:+.2%})  fps={fps:6.1f}")
+    return rows
+
+
+def table_v_scheduling(paper_faithful=True):
+    print("\n## Table V — scheduling methods x PE configurations (fps)")
+    cfgs = {"C(128,8)+P(64,9)": DUAL_BASELINE,
+            "C(180,8)+P(32,9)": DualCoreConfig(CoreConfig("c", 180, 8),
+                                               CoreConfig("p", 32, 9)),
+            "C(112,9)+P(72,8)": DualCoreConfig(CoreConfig("c", 112, 9),
+                                               CoreConfig("p", 72, 8))}
+    rows = []
+    print(f"{'model':<14}{'config':<20}"
+          f"{'l-type':>8}{'greedy':>8}{'r-robin':>8}{'lb-heur':>8}"
+          f"{'paper-lb':>9}{'delta':>8}")
+    for m in MODELS:
+        g = get_graph(m)
+        for cname, cfg in cfgs.items():
+            basic = [build_schedule(g, cfg, BOARD, s).throughput_fps()
+                     for s in ALLOCATION_SCHEMES]
+            lb = best_schedule(g, cfg, BOARD,
+                               paper_faithful=paper_faithful)
+            paper = TABLE_V_PAPER[(m, cname)]
+            delta = (lb.throughput_fps() - paper) / paper
+            rows.append((m, cname, *basic, lb.throughput_fps(), paper,
+                         delta))
+            print(f"{m:<14}{cname:<20}"
+                  f"{basic[0]:8.1f}{basic[1]:8.1f}{basic[2]:8.1f}"
+                  f"{lb.throughput_fps():8.1f}{paper:9.1f}{delta:+8.1%}")
+    gains = []
+    for m in MODELS:
+        g = get_graph(m)
+        basic = max(build_schedule(g, DUAL_BASELINE, BOARD,
+                                   s).throughput_fps()
+                    for s in ALLOCATION_SCHEMES)
+        lb = best_schedule(g, DUAL_BASELINE, BOARD,
+                           paper_faithful=True).throughput_fps()
+        gains.append(lb / basic - 1)
+    print(f"load-balance avg gain over basic schemes: "
+          f"{statistics.mean(gains):+.1%} (paper: ~+10%)")
+    return rows
+
+
+def table_vi_pe_config():
+    print("\n## Table VI — per-CNN PE config vs same-area single core")
+    rows = []
+    for m, (cfg, paper_fps, paper_base) in TABLE_VI_PAPER.items():
+        g = get_graph(m)
+        base = BOARD.fps(simulate_single_core(g, P128_9, BOARD).cycles)
+        faith = best_schedule(g, cfg, BOARD, paper_faithful=True)
+        ext = best_schedule(g, cfg, BOARD, paper_faithful=False)
+        rows.append((m, base, faith.throughput_fps(),
+                     ext.throughput_fps(), paper_fps))
+        print(f"{m:<14} base={base:6.1f} (paper {paper_base}) | "
+              f"faithful={faith.throughput_fps():6.1f} "
+              f"(paper {paper_fps}; gain {faith.throughput_fps()/base-1:+.0%}"
+              f" vs paper {paper_fps/paper_base-1:+.0%}) | "
+              f"extended={ext.throughput_fps():6.1f} "
+              f"eff={ext.runtime_pe_efficiency():.0%}")
+    return rows
+
+
+def table_vii_multi_cnn():
+    print("\n## Table VII — multi-CNN workload configuration")
+    graphs = [get_graph(m) for m in MODELS]
+    rows = []
+    for cfg in (DUAL_MBV1, DUAL_MBV2, DUAL_SQZ, DUAL_MULTI):
+        obj, fps, _ = evaluate_config(cfg, graphs, BOARD)
+        rows.append((str(cfg), fps, obj))
+        print(f"{str(cfg):<22} " + "  ".join(
+            f"{m.split('_')[0][:6]}{v:7.1f}" for m, v in fps.items())
+            + f"  harmonic={obj:7.1f} (paper avg col: "
+              f"{TABLE_VII_PAPER['average']})")
+    multi_obj = rows[-1][2]
+    best_single = max(r[2] for r in rows[:-1])
+    print(f"paper's multi-CNN config vs best single-CNN config on our "
+          f"landscape: {multi_obj/best_single-1:+.1%} (paper: +1.9%)")
+    # our own design-flow search over the multi-CNN workload (§V-B)
+    res = search(graphs, BOARD, max_evals=8)
+    print(f"our search: {res.config} theta={res.theta:.2f} "
+          f"harmonic={res.objective:7.1f} "
+          f"({res.objective/best_single-1:+.1%} vs best single-CNN cfg)")
+    rows.append((f"search:{res.config}", res.fps, res.objective))
+    return rows
+
+
+def table_viii_soa():
+    print("\n## Table VIII — throughput/DSP vs published designs "
+          "(normalised 8-bit ops)")
+    # our numbers from the extended flow; published rows from the paper
+    published = [
+        ("Light-OPU [5] mbv1", 704, 264.6, 0.21),
+        ("ours(paper) mbv1", 832, 326.2, 0.23),
+        ("Xilinx DPU mbv2", 2070, 587.2, 0.08),
+        ("ours(paper) mbv2", 832, 437.8, 0.16),
+        ("Xilinx DPU sqz", 1942, 1048.0, 0.20),
+        ("ours(paper) sqz", 832, 526.6, 0.22),
+    ]
+    rows = []
+    graphs = {m: get_graph(m) for m in MODELS}
+    _, fps, _ = evaluate_config(DUAL_MULTI, list(graphs.values()), BOARD)
+    for m in MODELS:
+        g = graphs[m]
+        dsp = DUAL_MULTI.n_dsp
+        gops = 2 * g.total_macs * fps[m] / 1e9
+        rows.append((m, fps[m], dsp, gops / dsp))
+        print(f"ours(repro) {m:<14} fps={fps[m]:7.1f} DSP={dsp} "
+              f"GOPs/DSP={gops/dsp:.3f}")
+    for name, dsp, fps_, gd in published:
+        print(f"published   {name:<14} fps={fps_:7.1f} DSP={dsp} "
+              f"GOPs/DSP={gd:.3f}")
+    return rows
+
+
+def fig1_layer_efficiency():
+    """Fig.1: per-layer runtime PE efficiency on uniform P(128,9) —
+    the zigzag that motivates the heterogeneous design."""
+    print("\n## Fig.1 — layer-wise runtime PE efficiency on P(128,9)")
+    for m in MODELS:
+        g = get_graph(m)
+        rows, total, eff = graph_latency_report(g.topological_order(),
+                                                P128_9, BOARD)
+        print(f"\n{m} (weighted avg {eff:.0%}; paper avg: "
+              f"{ {'mobilenet_v1': '59%', 'mobilenet_v2': '41%', 'squeezenet': '62%'}[m] }):")
+        for r in rows:
+            e = r.pe_efficiency(P128_9)
+            bar = "#" * int(e * 40)
+            print(f"  {r.layer:<16}{e:6.1%} {r.bound[:3]} |{bar}")
+    return None
+
+
+def run_all():
+    table_i_iii_area()
+    table_iv_simulator()
+    fig1_layer_efficiency()
+    table_v_scheduling()
+    table_vi_pe_config()
+    table_vii_multi_cnn()
+    table_viii_soa()

@@ -1,0 +1,103 @@
+"""§Roofline report generator: reads results/dryrun/*.json into the
+per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW_NOTE = ("constants: 197 TFLOP/s bf16/chip, 819 GB/s HBM, "
+           "~50 GB/s/link ICI")
+
+
+HBM_BW = 819e9
+
+
+def load(results_dir: str = "results/dryrun", mesh: str = "single"):
+    from repro.configs.registry import get_arch
+    from repro.launch.dryrun import microbatches_for
+    from repro.launch.roofline_model import hbm_bytes_per_device
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir,
+                                           f"*.{mesh}.json"))):
+        d = json.load(open(f))
+        if not d.get("ok"):
+            rows.append(d)
+            continue
+        # memory term from the analytic HBM model (the XLA CPU-backend
+        # 'bytes accessed' counts unfused operand traffic, ~1000x real;
+        # kept in the JSON as cost_analysis_bytes)
+        cfg = get_arch(d["arch"])
+        mb = (microbatches_for(cfg, d["batch"],
+                               32 if mesh == "multi" else 16)
+              if d["kind"] == "train" else 1)
+        hbm = hbm_bytes_per_device(cfg, d["kind"], d["seq"], d["batch"],
+                                   d["chips"], mb)
+        d["analytic_hbm_bytes"] = hbm
+        d["t_memory_s"] = hbm / HBM_BW
+        terms = {"compute": d.get("t_compute_s") or 0.0,
+                 "memory": d.get("t_memory_s") or 0.0,
+                 "collective": d.get("t_collective_s") or 0.0}
+        dom = max(terms, key=terms.get)
+        step = max(terms.values())
+        frac = terms["compute"] / step if step else 0.0
+        d["dominant"] = dom
+        d["step_bound_s"] = step
+        d["roofline_fraction"] = frac
+        rows.append(d)
+    return rows
+
+
+def what_would_help(d: dict) -> str:
+    dom = d.get("dominant")
+    if dom == "compute":
+        u = d.get("useful_flops_ratio") or 1.0
+        if u < 0.7:
+            return "cut recompute/waste (remat policy, fused loss)"
+        return "near roofline; larger per-chip tiles / fewer, bigger GEMMs"
+    if dom == "memory":
+        if d["kind"] in ("decode", "long-decode"):
+            return "KV/state quantization + wider batch per HBM stream"
+        return "re-layout to cut activation traffic; fuse norms/rope"
+    return ("reshard to cut all-reduce volume (TP only where FSDP "
+            "gathers exceed compute)")
+
+
+def report(results_dir: str = "results/dryrun", mesh: str = "single",
+           out_path: str | None = None) -> str:
+    rows = load(results_dir, mesh)
+    lines = [f"### Roofline — {mesh} pod ({HW_NOTE})", "",
+             "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "bound | step (s) | comp/step | MODEL/HLO | HBM GB | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    ok = 0
+    for d in rows:
+        if not d.get("ok"):
+            lines.append(f"| {d['arch']} | {d['shape']} | - | - | - | "
+                         f"FAILED {d.get('error','')[:40]} | | | | | |")
+            continue
+        ok += 1
+        u = d.get("useful_flops_ratio")
+        gb = (d.get("per_device_bytes") or 0) / 2 ** 30
+        lines.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {d['t_compute_s']:.3e} | {d['t_memory_s']:.3e} "
+            f"| {d['t_collective_s']:.3e} | {d['dominant']} "
+            f"| {d['step_bound_s']:.3e} | {d['roofline_fraction']:.2f} "
+            f"| {u:.2f} | {gb:.1f} | {'y' if d['fits_hbm'] else 'N'} |"
+            if u is not None else
+            f"| {d['arch']} | {d['shape']} | - | - | - | {d['dominant']}"
+            f" | | | | {gb:.1f} | {'y' if d['fits_hbm'] else 'N'} |")
+    lines.append("")
+    lines.append("Per-cell bottleneck guidance:")
+    for d in rows:
+        if d.get("ok"):
+            lines.append(f"- {d['arch']}/{d['shape']}: {d['dominant']}"
+                         f"-bound -> {what_would_help(d)}")
+    text = "\n".join(lines)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+    print(text)
+    print(f"\n{ok}/{len(rows)} cells ok")
+    return text

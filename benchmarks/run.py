@@ -1,0 +1,49 @@
+"""Benchmark entry point: PYTHONPATH=src python -m benchmarks.run
+
+Runs every paper-table reproduction + the LM-side dual-mesh benches +
+the roofline report (if dry-run results exist)."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-dualmesh", action="store_true")
+    ap.add_argument("--results", default="results/dryrun")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    print("# dual-OPU reproduction benchmarks")
+
+    from benchmarks import paper_tables
+    paper_tables.run_all()
+
+    from benchmarks import kernel_specs
+    kernel_specs.run_all()
+
+    if not args.skip_dualmesh:
+        from benchmarks import dualmesh_bench
+        dualmesh_bench.run_all()
+
+    if os.path.isdir(args.results) and os.listdir(args.results):
+        from benchmarks import roofline
+        print("\n# Roofline (from dry-run artifacts)")
+        roofline.report(args.results, "single",
+                        out_path="results/roofline_single.md")
+        multi = [f for f in os.listdir(args.results)
+                 if f.endswith(".multi.json")]
+        if multi:
+            roofline.report(args.results, "multi",
+                            out_path="results/roofline_multi.md")
+    else:
+        print("\n(no dry-run results yet — run "
+              "`python -m repro.launch.dryrun --all` first)")
+    print(f"\nbenchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""The paper's §V-B co-optimization: find the best dual-core PE allocation
+for a multi-CNN workload, then the LM-side twin (submesh split).
+
+    PYTHONPATH=src python examples/design_space_search.py
+"""
+from repro.core import BoardModel, search as fpga_search
+from repro.models.zoo import get_graph
+
+from repro.configs.registry import get_arch
+from repro.dualmesh import request_stages, search as tpu_search
+
+
+def main():
+    # FPGA side (the paper, Table VII)
+    graphs = [get_graph(m) for m in
+              ("mobilenet_v1", "mobilenet_v2", "squeezenet")]
+    res = fpga_search(graphs, BoardModel(), max_evals=6)
+    print(f"[fpga] best config {res.config} (theta={res.theta:.2f}), "
+          f"harmonic fps={res.objective:.1f}")
+    for m, fps in res.fps.items():
+        print(f"    {m:<14} {fps:7.1f} fps")
+
+    # TPU side (DESIGN.md §2): same flow, submesh split for LM serving
+    cfg = get_arch("qwen2_5_14b")
+    stages = request_stages(cfg, [(8, 8192, 256)] * 4)
+    plan = tpu_search(stages, cfg, n_devices=256, max_evals=10)
+    print(f"[tpu]  theta={plan.theta:.2f} tp=({plan.tp_c},{plan.tp_p}) "
+          f"makespan={plan.makespan*1e3:.1f} ms, "
+          f"{plan.tokens_per_s:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — dual-OPU (Zhao et al., cs.AR 2021) reproduced in JAX and ported
+to multi-pod TPU.
+
+Subpackages:
+  core      the paper: PE-array models, tiling/latency/area, scheduling
+            (Alg.1), branch-and-bound search, cycle-accurate simulator
+  models    MobileNet v1/v2 + SqueezeNet (JAX, graph-locked)
+  kernels   Pallas TPU kernels + jit wrappers + jnp oracles
+  lm        the 10 assigned LM architectures (train + decode paths)
+  dualmesh  the paper's design flow as a TPU serving feature
+  data / train   pipeline, AdamW, checkpointing, fault-tolerant runner
+  configs   exact assigned configs + smoke variants
+  launch    production meshes, sharding policies, multi-pod dry-run
+"""
+
+__version__ = "1.0.0"

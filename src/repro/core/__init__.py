@@ -1,0 +1,44 @@
+"""dual-OPU core: the paper's contribution as a composable library.
+
+Layers:
+  graph      - layer-graph IR (LayerSpec / LayerGraph)
+  arch       - CoreConfig (n,v), DualCoreConfig, BoardModel, ResourceBudget
+  tiling     - Eq.2-4 tile sizing
+  latency    - Eq.5-7 latency model + Eq.1 runtime PE efficiency
+  area       - Eq.8 + BRAM/LUT/FF resource model (Tables I & III anchors)
+  scheduler  - allocation / partitioning / interleaving / Alg.1 load balance
+  search     - branch-and-bound theta + local (n,v) search (§V-B)
+  isa        - instruction compiler (LOAD/COMPUTE/STORE/SYNC)
+  simulator  - cycle-accurate instruction-level simulator (Table IV)
+"""
+from repro.core.arch import (ALPHA, V_CANDIDATES, BoardModel, CoreConfig,
+                             DualCoreConfig, ResourceBudget, P128_9,
+                             DUAL_BASELINE, DUAL_MBV1, DUAL_MBV2, DUAL_SQZ,
+                             DUAL_MULTI)
+from repro.core.graph import LayerGraph, LayerSpec, chain_graph
+from repro.core.latency import (LayerLatency, compute_cycles, layer_latency,
+                                load_cycles, total_latency,
+                                graph_latency_report)
+from repro.core.area import (CoreArea, core_area, dual_core_area,
+                             pe_structure_lut_equiv, count_ramb18k)
+from repro.core.tiling import Tiling, tile_layer
+from repro.core.scheduler import (Group, Schedule, best_schedule,
+                                  build_schedule, load_balance, allocate,
+                                  partition, ALLOCATION_SCHEMES)
+from repro.core.search import SearchResult, search, evaluate_config, \
+    harmonic_mean
+from repro.core.simulator import (SimTrace, simulate_single_core,
+                                  simulate_dual_core, DualSimResult)
+
+__all__ = [
+    "ALPHA", "V_CANDIDATES", "BoardModel", "CoreConfig", "DualCoreConfig",
+    "ResourceBudget", "P128_9", "DUAL_BASELINE", "DUAL_MBV1", "DUAL_MBV2",
+    "DUAL_SQZ", "DUAL_MULTI", "LayerGraph", "LayerSpec", "chain_graph",
+    "LayerLatency", "compute_cycles", "layer_latency", "load_cycles",
+    "total_latency", "graph_latency_report", "CoreArea", "core_area",
+    "dual_core_area", "pe_structure_lut_equiv", "count_ramb18k", "Tiling",
+    "tile_layer", "Group", "Schedule", "best_schedule", "build_schedule",
+    "load_balance", "allocate", "partition", "ALLOCATION_SCHEMES",
+    "SearchResult", "search", "evaluate_config", "harmonic_mean", "SimTrace",
+    "simulate_single_core", "simulate_dual_core", "DualSimResult",
+]

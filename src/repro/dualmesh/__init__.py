@@ -1,0 +1,23 @@
+"""dual-mesh: the paper's heterogeneous dual-core design flow as a
+first-class TPU serving feature (DESIGN.md §2).
+
+  partition  - theta split of a chip pool into c-/p-submeshes (Eq.10)
+  cost       - 3-term roofline stage model (Eq.5-7 port)
+  schedule   - interleaved two-stream scheduling + Alg.1 load balance
+  search     - branch-and-bound theta + (tp_c, tp_p) local search (§V-B)
+  runtime    - real dual-submesh execution (async jit on disjoint devices)
+"""
+from repro.dualmesh.cost import StageCost, TpuModel, decode_cost, \
+    prefill_cost
+from repro.dualmesh.partition import DualMesh, split_mesh, theta_candidates
+from repro.dualmesh.schedule import (ALLOCATIONS, DualSchedule, Stage,
+                                     best_schedule, build, load_balance,
+                                     request_stages)
+from repro.dualmesh.search import DualSearchResult, search
+from repro.dualmesh.runtime import DualMeshRunner
+
+__all__ = ["StageCost", "TpuModel", "decode_cost", "prefill_cost",
+           "DualMesh", "split_mesh", "theta_candidates", "ALLOCATIONS",
+           "DualSchedule", "Stage", "best_schedule", "build",
+           "load_balance", "request_stages", "DualSearchResult", "search",
+           "DualMeshRunner"]

@@ -1,0 +1,122 @@
+"""Roofline cost model for LM serving stages (the TPU port of the paper's
+Eq.5-7 latency model; DESIGN.md §2).
+
+The dual-OPU models a layer as max(T_load, T_compute) through ping-pong
+buffers; on a TPU submesh a serving stage is max of three terms:
+
+    t_compute    = stage FLOPs / (chips * peak)
+    t_memory     = HBM bytes touched / (chips * hbm_bw)
+    t_collective = TP-collective bytes / (chips * ici_bw)
+
+Prefill is compute-bound (the c-class stage: regular-conv analogue);
+decode streams the whole KV cache / recurrent state per token and is
+memory-bound (the p-class stage: depthwise analogue).  The same constants
+feed EXPERIMENTS.md §Roofline, so the scheduler optimises exactly the
+quantity the analysis reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.lm.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuModel:
+    peak_flops: float = 197e12      # bf16 per chip (v5e)
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+    hbm_bytes: int = 16 * 1024 ** 3
+    mfu_ceiling: float = 0.6        # achievable fraction of peak for GEMMs
+    bw_ceiling: float = 0.8        # achievable fraction of HBM bandwidth
+    # Per-decode-step latency floor: dispatch + TP-collective latency +
+    # DP sync.  This is the TPU analogue of the paper's runtime-PE-
+    # efficiency gap: it is the term that makes decode prefer a small
+    # submesh (adding chips cannot buy back the per-step floor), exactly
+    # as depthwise conv could not use the c-core's MACs (§II).
+    step_floor_base: float = 25e-6
+    step_floor_tp: float = 8e-6     # x log2(tp)
+    step_floor_dp: float = 2e-6     # x log2(chips / tp)
+
+    def step_floor(self, chips: int, tp: int) -> float:
+        tp = max(1, tp)
+        dp = max(1, chips // tp)
+        t = self.step_floor_base
+        if tp > 1:
+            t += self.step_floor_tp * math.log2(tp)
+        if dp > 1:
+            t += self.step_floor_dp * math.log2(dp)
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def latency(self) -> float:
+        # compute/memory overlap within a stage is limited; collectives can
+        # overlap with compute -> max() of the three (paper Eq.7 discipline)
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+
+def _weight_bytes(cfg: ArchConfig, active: bool = True) -> float:
+    n = cfg.active_param_count() if active else cfg.param_count()
+    return 2.0 * n                       # bf16
+
+
+def prefill_cost(cfg: ArchConfig, batch: int, seq: int, chips: int,
+                 hw: TpuModel = TpuModel(),
+                 tp: int = 8) -> StageCost:
+    """Process ``batch`` prompts of ``seq`` tokens on ``chips`` devices."""
+    tokens = batch * seq
+    flops = 2.0 * cfg.active_param_count() * tokens
+    if cfg.block_type == "transformer":
+        flops += 4.0 * cfg.n_layers * batch * seq * seq * cfg.q_dim / 2
+    t_c = flops / (chips * hw.peak_flops * hw.mfu_ceiling)
+    # weights stream once per stage (good blocking); activations ~2x
+    act = 2.0 * tokens * cfg.d_model * 2 * cfg.n_layers
+    t_m = (_weight_bytes(cfg) / max(1, chips) + act / chips) \
+        / (hw.hbm_bw * hw.bw_ceiling)
+    # TP collectives: 2 all-reduces of the activations per layer across tp
+    coll = 2.0 * cfg.n_layers * tokens * cfg.d_model * 2 * (tp - 1) / tp
+    t_x = coll / (chips * hw.ici_bw)
+    return StageCost(t_c, t_m, t_x)
+
+
+def decode_cost(cfg: ArchConfig, batch: int, kv_len: int, chips: int,
+                steps: int = 1, hw: TpuModel = TpuModel(),
+                tp: int = 8) -> StageCost:
+    """Generate ``steps`` tokens for ``batch`` sequences with a ``kv_len``
+    cache (or O(1) recurrent state)."""
+    flops = 2.0 * cfg.active_param_count() * batch * steps
+    if cfg.block_type == "transformer":
+        flops += 4.0 * cfg.n_layers * batch * kv_len * cfg.q_dim * steps
+    t_c = flops / (chips * hw.peak_flops * hw.mfu_ceiling)
+    # every step reads all active weights + the whole KV cache / state
+    kv = 0.0
+    if cfg.block_type == "transformer" or cfg.attn_every:
+        layers = (cfg.n_layers if cfg.block_type == "transformer"
+                  else cfg.n_layers // max(1, cfg.attn_every))
+        kv = 2.0 * layers * batch * cfg.n_kv_heads * cfg.d_head * kv_len * 2
+    if cfg.block_type in ("mamba2", "mlstm"):
+        din = cfg.d_inner
+        state = cfg.n_layers * batch * cfg.ssm_heads * \
+            (din // cfg.ssm_heads) * max(cfg.ssm_state, 1) * 4
+        kv += state
+    t_m = steps * (_weight_bytes(cfg) + kv) / (chips * hw.hbm_bw
+                                               * hw.bw_ceiling)
+    coll = 2.0 * cfg.n_layers * batch * cfg.d_model * 2 * (tp - 1) / tp \
+        * steps
+    t_x = coll / (chips * hw.ici_bw)
+    floor = steps * cfg.n_layers * hw.step_floor(chips, tp) / 4
+    return StageCost(t_c, max(t_m, floor), t_x)

@@ -1,0 +1,95 @@
+"""theta-split of a device pool into the c-submesh and p-submesh
+(the TPU port of the paper's Eq.10 DSP ratio; DESIGN.md §2).
+
+The paper splits one FPGA's DSP budget between a channel-parallel c-core and
+a pixel-parallel p-core; here we split a pod's chips between a
+compute-shaped submesh (prefill / training: bigger TP groups feed the MXU)
+and a bandwidth-shaped submesh (decode: more, smaller TP groups maximise
+aggregate HBM streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class DualMesh:
+    c_mesh: Mesh                 # prefill / compute-bound stages
+    p_mesh: Mesh                 # decode / memory-bound stages
+    theta: float                 # realised c-share of the chips
+
+    @property
+    def c_chips(self) -> int:
+        return math.prod(self.c_mesh.shape.values())
+
+    @property
+    def p_chips(self) -> int:
+        return math.prod(self.p_mesh.shape.values())
+
+
+def _factor_mesh(devs, tp: int, axes=("data", "model")) -> Mesh:
+    n = len(devs)
+    tp = max(1, min(tp, n))
+    while n % tp:
+        tp -= 1
+    arr = np.asarray(devs).reshape(n // tp, tp)
+    return Mesh(arr, axes)
+
+
+def split_mesh(devices=None, theta: float = 0.5, tp_c: int = 16,
+               tp_p: int = 4) -> DualMesh:
+    """Split ``devices`` into c/p submeshes with c-share ~= theta.
+
+    tp_c / tp_p are the per-submesh tensor-parallel widths: the c-submesh
+    defaults to wide TP (compute: bigger GEMM tiles per collective), the
+    p-submesh to narrow TP (decode: KV streams stay local).  With a single
+    device (CPU tests) both submeshes alias it (degenerate but functional).
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    if len(devs) < 2:
+        m = _factor_mesh(devs, 1)
+        return DualMesh(m, m, theta=0.5)
+    n_c = min(len(devs) - 1, max(1, round(theta * len(devs))))
+    c = _factor_mesh(devs[:n_c], tp_c)
+    p = _factor_mesh(devs[n_c:], tp_p)
+    return DualMesh(c, p, theta=n_c / len(devs))
+
+
+@dataclasses.dataclass(frozen=True)
+class _AbstractSubMesh:
+    """Duck-typed stand-in for planning without real devices: the scheduler
+    and cost model only read ``shape``."""
+    shape: dict
+
+
+def abstract_split(n_devices: int, theta: float, tp_c: int = 16,
+                   tp_p: int = 4) -> DualMesh:
+    """Plan-time split: chip counts + TP widths only (no jax devices).
+    Used by the design-flow search for pods larger than the local host."""
+    n_c = min(n_devices - 1, max(1, round(theta * n_devices)))
+    n_p = n_devices - n_c
+    tc = max(1, min(tp_c, n_c))
+    while n_c % tc:
+        tc -= 1
+    tp_ = max(1, min(tp_p, n_p))
+    while n_p % tp_:
+        tp_ -= 1
+    c = _AbstractSubMesh({"data": n_c // tc, "model": tc})
+    p = _AbstractSubMesh({"data": n_p // tp_, "model": tp_})
+    return DualMesh(c, p, theta=n_c / n_devices)  # type: ignore[arg-type]
+
+
+def theta_candidates(n_devices: int, tp_c: int = 16,
+                     tp_p: int = 4) -> list[float]:
+    """Feasible thetas: both submeshes must factor into their TP widths."""
+    out = []
+    for n_c in range(1, n_devices):
+        n_p = n_devices - n_c
+        if n_c % math.gcd(n_c, tp_c) == 0 and n_p % math.gcd(n_p, tp_p) == 0:
+            out.append(n_c / n_devices)
+    return sorted(set(out))

@@ -1,0 +1,214 @@
+"""Interleaved dual-stream scheduling for LM serving — the paper's §V
+algorithms re-targeted (DESIGN.md §2 mapping):
+
+  paper                         | here
+  ------------------------------+------------------------------------------
+  layer graph G(V,E)            | request stage chain: prefill -> decode
+  c-core / p-core groups        | c-submesh / p-submesh stage groups
+  interleave 2 images (Fig.4b)  | interleave 2 request streams
+  Alg.1 split along ifm height  | split prefill along sequence (chunked
+                                |   prefill) / decode along steps
+  T_b2 (two-batch makespan)     | two-stream makespan (same recurrence)
+
+The same three allocation seeds (stage-type / greedy / round-robin) and the
+same largest-gap split heuristic are used, so Table-V-style comparisons are
+reproducible on the LM side (benchmarks/dualmesh_bench.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.dualmesh.cost import StageCost, TpuModel, decode_cost, \
+    prefill_cost
+from repro.dualmesh.partition import DualMesh
+from repro.lm.config import ArchConfig
+
+ALLOCATIONS = ("stage_type", "greedy", "round_robin")
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One schedulable unit of a request batch."""
+    kind: str                 # 'prefill' | 'decode'
+    batch: int
+    seq: int                  # prefill: tokens to process; decode: kv_len
+    steps: int = 1            # decode steps in this stage
+
+    def split_seq(self, left: int) -> tuple["Stage", "Stage"]:
+        assert self.kind == "prefill" and 0 < left < self.seq
+        return (dataclasses.replace(self, seq=left),
+                dataclasses.replace(self, seq=self.seq - left))
+
+    def split_steps(self, left: int) -> tuple["Stage", "Stage"]:
+        assert self.kind == "decode" and 0 < left < self.steps
+        return (dataclasses.replace(self, steps=left),
+                dataclasses.replace(self, steps=self.steps - left))
+
+
+def stage_cost(st: Stage, cfg: ArchConfig, chips: int, tp: int,
+               hw: TpuModel) -> float:
+    if st.kind == "prefill":
+        return prefill_cost(cfg, st.batch, st.seq, chips, hw, tp).latency
+    return decode_cost(cfg, st.batch, st.seq, chips, st.steps, hw,
+                       tp).latency
+
+
+@dataclasses.dataclass
+class MeshGroup:
+    mesh: str                 # 'c' | 'p'
+    stages: list[Stage]
+
+    def latency(self, cfg, dual: DualMesh, hw) -> float:
+        chips = dual.c_chips if self.mesh == "c" else dual.p_chips
+        tp = (dual.c_mesh.shape.get("model", 1) if self.mesh == "c"
+              else dual.p_mesh.shape.get("model", 1))
+        return sum(stage_cost(s, cfg, chips, tp, hw) for s in self.stages)
+
+
+@dataclasses.dataclass
+class DualSchedule:
+    groups: list[MeshGroup]
+    cfg: ArchConfig
+    dual: DualMesh
+    hw: TpuModel
+    scheme: str = "custom"
+
+    def latencies(self) -> list[float]:
+        return [g.latency(self.cfg, self.dual, self.hw)
+                for g in self.groups]
+
+    def makespan(self) -> float:
+        """Two-stream staggered makespan (the paper's corrected T_b2)."""
+        t = self.latencies()
+        if not t:
+            return 0.0
+        total = t[0]
+        for i in range(1, len(t)):
+            total += max(t[i], t[i - 1])
+        return total + t[-1]
+
+    def throughput_tokens_per_s(self) -> float:
+        toks = 2 * sum(s.seq if s.kind == "prefill" else s.steps * s.batch
+                       for g in self.groups for s in g.stages)
+        span = self.makespan()
+        return toks / span if span else float("inf")
+
+
+def request_stages(cfg: ArchConfig, prompts: Sequence[tuple[int, int, int]]
+                   ) -> list[Stage]:
+    """prompts: (batch, prompt_len, gen_len) per request group ->
+    alternating prefill/decode stage chain (the 'layer graph')."""
+    out = []
+    for batch, plen, glen in prompts:
+        out.append(Stage("prefill", batch, plen))
+        out.append(Stage("decode", batch, plen, steps=glen))
+    return out
+
+
+def allocate(stages: list[Stage], cfg, dual: DualMesh, hw,
+             scheme: str) -> list[str]:
+    if scheme == "stage_type":     # layer-type analogue
+        return ["c" if s.kind == "prefill" else "p" for s in stages]
+    if scheme == "round_robin":
+        return ["c" if i % 2 == 0 else "p" for i in range(len(stages))]
+    if scheme == "greedy":
+        out = []
+        for s in stages:
+            tc = stage_cost(s, cfg, dual.c_chips,
+                            dual.c_mesh.shape.get("model", 1), hw)
+            tp_ = stage_cost(s, cfg, dual.p_chips,
+                             dual.p_mesh.shape.get("model", 1), hw)
+            out.append("c" if tc <= tp_ else "p")
+        return out
+    raise ValueError(scheme)
+
+
+def build(stages, cfg, dual, hw, scheme) -> DualSchedule:
+    groups: list[MeshGroup] = []
+    for s, m in zip(stages, allocate(stages, cfg, dual, hw, scheme)):
+        if groups and groups[-1].mesh == m:
+            groups[-1].stages.append(s)
+        else:
+            groups.append(MeshGroup(m, [s]))
+    return DualSchedule(groups, cfg, dual, hw, scheme)
+
+
+def load_balance(sched: DualSchedule, rounds: int = 32) -> DualSchedule:
+    """Alg.1 analogue: split the boundary stage of the worst-gap pair along
+    its sequence (prefill) or steps (decode) and move the remainder to the
+    neighbouring group on the other submesh."""
+    s = DualSchedule([MeshGroup(g.mesh, list(g.stages))
+                      for g in sched.groups], sched.cfg, sched.dual,
+                     sched.hw, sched.scheme + "+lb")
+    best = s.makespan()
+    for _ in range(rounds):
+        t = s.latencies()
+        if len(t) < 2:
+            break
+        pairs = sorted(range(len(t) - 1), key=lambda i: -abs(t[i] - t[i + 1]))
+        improved = False
+        for pi in pairs:
+            longer, shorter = (pi, pi + 1) if t[pi] > t[pi + 1] \
+                else (pi + 1, pi)
+            val = _try_split(s, longer, shorter, best)
+            if val is not None and val < best - 1e-12:
+                best = val
+                improved = True
+                break
+        if not improved:
+            break
+    return s
+
+
+def _try_split(s: DualSchedule, longer: int, shorter: int,
+               best: float) -> float | None:
+    gl = s.groups[longer]
+    if not gl.stages:
+        return None
+    tail = longer < shorter
+    st = gl.stages[-1] if tail else gl.stages[0]
+    axis = st.seq if st.kind == "prefill" else st.steps
+    if axis < 2:
+        return None
+    best_cut, best_val = None, best
+    step = max(1, axis // 16)
+    for cut in range(step, axis, step):
+        a, b = (st.split_seq(cut) if st.kind == "prefill"
+                else st.split_steps(cut))
+        keep, move = (a, b) if tail else (b, a)
+        trial = [MeshGroup(g.mesh, list(g.stages)) for g in s.groups]
+        if tail:
+            trial[longer].stages[-1] = keep
+            trial[shorter].stages.insert(0, move)
+        else:
+            trial[longer].stages[0] = keep
+            trial[shorter].stages.append(move)
+        val = DualSchedule(trial, s.cfg, s.dual, s.hw).makespan()
+        if val < best_val:
+            best_val, best_cut = val, cut
+    if best_cut is None:
+        return None
+    a, b = (st.split_seq(best_cut) if st.kind == "prefill"
+            else st.split_steps(best_cut))
+    keep, move = (a, b) if tail else (b, a)
+    if tail:
+        gl.stages[-1] = keep
+        s.groups[shorter].stages.insert(0, move)
+    else:
+        gl.stages[0] = keep
+        s.groups[shorter].stages.append(move)
+    return best_val
+
+
+def best_schedule(stages, cfg, dual: DualMesh,
+                  hw: TpuModel = TpuModel(),
+                  with_load_balance: bool = True) -> DualSchedule:
+    cands = []
+    for scheme in ALLOCATIONS:
+        b = build(stages, cfg, dual, hw, scheme)
+        cands.append(b)
+        if with_load_balance:
+            cands.append(load_balance(b))
+    return min(cands, key=lambda x: x.makespan())

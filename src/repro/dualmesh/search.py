@@ -1,0 +1,117 @@
+"""Co-optimisation of the device split and the schedule — the paper's §V-B
+branch-and-bound, re-targeted from DSP ratios to submesh splits.
+
+Branch on theta (c-submesh chip share, Eq.10 analogue), bound with the
+ideal roofline (Eq.11 analogue: every stage at its best submesh's peak,
+ignoring scheduling structure), then local-search the discrete knobs
+(tp_c, tp_p — the (n, v) analogue: chips x TP width per submesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.dualmesh.cost import TpuModel, decode_cost, prefill_cost
+from repro.dualmesh.partition import DualMesh, split_mesh, theta_candidates
+from repro.dualmesh.schedule import Stage, best_schedule, stage_cost
+from repro.lm.config import ArchConfig
+
+TP_CANDIDATES = (1, 2, 4, 8, 16)
+
+
+@dataclasses.dataclass
+class DualSearchResult:
+    dual: DualMesh
+    theta: float
+    tp_c: int
+    tp_p: int
+    makespan: float
+    tokens_per_s: float
+    schedule: object
+    visited: list[float]
+
+
+def makespan_lower_bound(stages: Sequence[Stage], cfg: ArchConfig,
+                         n_devices: int, theta: float,
+                         hw: TpuModel) -> float:
+    """Eq.11 analogue: each stage at the ideal rate of its preferred
+    submesh, perfect overlap across the two submeshes."""
+    n_c = max(1, round(theta * n_devices))
+    n_p = max(1, n_devices - n_c)
+    t_c = t_p = 0.0
+    for s in stages:
+        cost_c = stage_cost(s, cfg, n_c, min(16, n_c), hw)
+        cost_p = stage_cost(s, cfg, n_p, min(16, n_p), hw)
+        if cost_c <= cost_p:
+            t_c += cost_c
+        else:
+            t_p += cost_p
+    return max(t_c, t_p)      # perfect pipeline: the busier mesh bounds
+
+
+def search(stages: Sequence[Stage], cfg: ArchConfig, devices=None,
+           n_devices: int | None = None, hw: TpuModel = TpuModel(),
+           max_evals: int = 16) -> DualSearchResult:
+    """Plan on chip counts (``n_devices``, abstract) or on real devices."""
+    from repro.dualmesh.partition import abstract_split
+    import jax
+    devs = list(devices) if devices is not None else None
+    n = n_devices or (len(devs) if devs else len(jax.devices()))
+    use_abstract = devs is None or len(devs) < n
+    incumbent: DualSearchResult | None = None
+    visited: list[float] = []
+
+    def fits(tp: int, chips: int) -> bool:
+        """Per-device HBM: TP-sharded weights + this workload's KV share."""
+        w = 2.0 * cfg.param_count() / max(1, tp)
+        kv = 0.0
+        for s in stages:
+            if s.kind == "decode" and cfg.block_type == "transformer":
+                kv += (2.0 * cfg.n_layers * s.batch * cfg.n_kv_heads
+                       * cfg.d_head * s.seq * 2) / max(1, chips)
+        return w + kv <= 0.75 * hw.hbm_bytes
+
+    def evaluate(theta: float, relax: bool = False):
+        nonlocal incumbent
+        visited.append(theta)
+        for tp_c in TP_CANDIDATES:
+            for tp_p in TP_CANDIDATES:
+                if tp_c > n or tp_p > n:
+                    continue
+                if use_abstract:
+                    dual = abstract_split(n, theta, tp_c, tp_p)
+                else:
+                    dual = split_mesh(devs, theta, tp_c, tp_p)
+                if not relax and not (fits(tp_c, dual.c_chips)
+                                      and fits(tp_p, dual.p_chips)):
+                    continue
+                sched = best_schedule(stages, cfg, dual, hw)
+                ms = sched.makespan()
+                if incumbent is None or ms < incumbent.makespan:
+                    incumbent = DualSearchResult(
+                        dual=dual, theta=dual.theta, tp_c=tp_c, tp_p=tp_p,
+                        makespan=ms,
+                        tokens_per_s=sched.throughput_tokens_per_s(),
+                        schedule=sched, visited=visited)
+
+    evaluate(0.5)
+    work = [(0.1, 0.9)]
+    while work and len(visited) < max_evals:
+        lo, hi = work.pop(0)
+        if hi - lo < 0.08:
+            continue
+        mid = 0.5 * (lo + hi)
+        lb = makespan_lower_bound(stages, cfg, n, mid, hw)
+        if incumbent is not None and lb >= incumbent.makespan:
+            continue                      # prune (early termination, §V-B2)
+        evaluate(mid)
+        work += [(lo, mid), (mid, hi)]
+    if incumbent is None:
+        # no (theta, tp) combo satisfies the HBM constraint at bf16 weights
+        # (e.g. 104B on a 256-chip pod): fall back to the best-effort plan
+        # and let the caller see it — weight quantization territory.
+        evaluate(0.5, relax=True)
+    assert incumbent is not None
+    incumbent.visited = visited
+    return incumbent

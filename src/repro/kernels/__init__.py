@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical hot-spots.
+
+Each kernel ships three files (repo convention):
+  kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target;
+             validated with interpret=True on this CPU container)
+  ops.py     jit'd wrapper / dispatch
+  ref.py     pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  conv_gemm   c-core analogue — im2col GEMM, MXU 128x128 tiles, fused
+              bias+ReLU6 epilogue
+  depthwise   p-core analogue — VMEM halo tile (the line-buffer port)
+  attention   flash attention (train/prefill) + split-K decode; int8-KV
+              variants live in repro.lm.modules
+  rmsnorm     fused norm used by every assigned arch
+"""

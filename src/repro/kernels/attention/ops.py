@@ -1,0 +1,29 @@
+"""jit'd attention entry points used by the LM substrate.
+
+``attention(...)`` dispatches between the XLA einsum path (default — what the
+multi-pod dry-run lowers, since Pallas TPU kernels cannot be compiled on this
+CPU container) and the Pallas flash kernel (validated in interpret mode;
+``use_pallas=True`` on real hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.attention.kernel import decode_attention, flash_attention
+from repro.kernels.attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas",
+                                             "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, use_pallas: bool = False,
+              interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, interpret=interpret)
+    return attention_ref(q, k, v, causal=causal)
+
+
+__all__ = ["attention", "flash_attention", "decode_attention",
+           "attention_ref"]

@@ -1,0 +1,41 @@
+"""jit'd wrapper: 2D convolution as im2col + Pallas GEMM (c-core analogue)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv_gemm.kernel import DEFAULT_BLOCK, matmul_bias_act
+from repro.kernels.conv_gemm.ref import im2col
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "pad", "act", "block",
+                                    "interpret"))
+def conv2d_gemm(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+                *, stride: int = 1, pad: int = 0, act: str | None = None,
+                block=DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
+    """NHWC conv: im2col then the tiled GEMM kernel with fused epilogue.
+
+    x: (N, H, W, C_i); w: (K_h, K_w, C_i, C_o); bias: (C_o,) or None.
+    """
+    kh, kw, ci, co = w.shape
+    patches, (n, ho, wo) = im2col(x, kh, kw, stride, pad)
+    wm = w.reshape(kh * kw * ci, co)
+    out = matmul_bias_act(patches, wm, bias, block=block, act=act,
+                          interpret=interpret)
+    return out.reshape(n, ho, wo, co)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block", "interpret"))
+def pointwise_conv(x: jax.Array, w: jax.Array,
+                   bias: jax.Array | None = None, *, act: str | None = None,
+                   block=DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
+    """1x1 conv fast path: pure GEMM over flattened pixels."""
+    n, h, wd, ci = x.shape
+    co = w.shape[-1]
+    out = matmul_bias_act(x.reshape(n * h * wd, ci),
+                          w.reshape(ci, co), bias, block=block, act=act,
+                          interpret=interpret)
+    return out.reshape(n, h, wd, co)

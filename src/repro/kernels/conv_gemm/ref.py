@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the conv_gemm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(x: jax.Array, w: jax.Array,
+                        bias: jax.Array | None = None,
+                        act: str | None = None) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    return out.astype(x.dtype)
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int,
+           pad: int) -> jax.Array:
+    """NHWC -> (N*Ho*Wo, kh*kw*C) patch matrix."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    idx_h = jnp.arange(ho) * stride
+    idx_w = jnp.arange(wo) * stride
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(xp[:, idx_h + i][:, :, idx_w + j])  # (n,ho,wo,c)
+    # (n, ho, wo, kh*kw, c) -> (n*ho*wo, kh*kw*c)
+    pm = jnp.stack(patches, axis=3)
+    return pm.reshape(n * ho * wo, kh * kw * c), (n, ho, wo)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+               stride: int = 1, pad: int = 0,
+               act: str | None = None) -> jax.Array:
+    """Reference NHWC conv via jax.lax (oracle for the full conv op)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    return out.astype(x.dtype)

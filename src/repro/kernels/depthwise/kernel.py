@@ -1,0 +1,85 @@
+"""p-core analogue: depthwise conv Pallas kernel with VMEM sliding-window
+reuse (the TPU port of the paper's line buffer, DESIGN.md §2).
+
+The dual-OPU p-core keeps a T_w*(T_kh-1)+T_kw line buffer in BRAM so each ifm
+pixel is read from DRAM once and reused across the K_h x K_w window.  On TPU
+the analogue is: bring a (H+K-1, W+K-1, block_c) halo tile into VMEM once and
+compute every window tap from it — HBM traffic is 1x the ifm instead of
+K_h*K_w x.  Channel parallelism maps to the VPU lanes (channels-last, so the
+per-tap multiply is a (Ho, Wo, block_c) vector op), mirroring the p-core's
+per-PE-per-channel layout.
+
+Grid: (N, C / block_c).  Each step holds x_tile + out tile in VMEM:
+for 112x114x114 x 64ch x 4B ~ 3.3 MiB — fits; block_c shrinks for larger
+maps (chosen by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, stride: int,
+               fuse_bias: bool, act: str | None):
+    """x_ref: (1, Hp, Wp, bc) padded halo tile; w_ref: (kh, kw, bc);
+    o_ref: (1, Ho, Wo, bc)."""
+    _, ho, wo, bc = o_ref.shape
+    x = x_ref[0]
+    acc = jnp.zeros((ho, wo, bc), jnp.float32)
+    for i in range(kh):          # unrolled window taps — every tap reads the
+        for j in range(kw):      # same VMEM tile (line-buffer reuse)
+            tap = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, bc),
+                (stride, stride, 1))
+            acc = acc + tap.astype(jnp.float32) * w_ref[i, j, :].astype(
+                jnp.float32)
+    if fuse_bias:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "relu6":
+        acc = jnp.clip(acc, 0.0, 6.0)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "act",
+                                             "block_c", "interpret"))
+def depthwise_conv2d(x: jax.Array, w: jax.Array,
+                     bias: jax.Array | None = None, *, stride: int = 1,
+                     pad: int = 1, act: str | None = None,
+                     block_c: int = 64, interpret: bool = True) -> jax.Array:
+    """NHWC depthwise conv.  x: (N,H,W,C); w: (K_h,K_w,C); bias: (C,)."""
+    n, h, wd, c = x.shape
+    kh, kw, cw = w.shape
+    assert cw == c, (w.shape, c)
+    bc = min(block_c, c)
+    # pad channels to a block multiple, spatial by the conv padding
+    cpad = -c % bc
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, cpad)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cpad)))
+    fuse_bias = bias is not None
+    b = bias if fuse_bias else jnp.zeros((c,), x.dtype)
+    bp = jnp.pad(b, (0, cpad))
+    cp = c + cpad
+    hp, wp_ = h + 2 * pad, wd + 2 * pad
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wd + 2 * pad - kw) // stride + 1
+    grid = (n, cp // bc)
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, kh=kh, kw=kw, stride=stride,
+                          fuse_bias=fuse_bias, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_, bc), lambda i, j: (i, 0, 0, j)),
+            pl.BlockSpec((kh, kw, bc), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cp), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[..., :c]

@@ -1,0 +1,33 @@
+"""jit'd wrapper for the depthwise kernel with VMEM-aware channel blocking."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.depthwise.kernel import depthwise_conv2d
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a v5e core's VMEM for x-tile
+
+
+def pick_block_c(h: int, w: int, c: int, kh: int, kw: int,
+                 bytes_per_elem: int = 4) -> int:
+    """Largest channel block whose halo tile fits the VMEM budget — the
+    Eq.2-style knob of the p-core port: T_c here plays the role of (n,v)."""
+    tile = (h + kh - 1) * (w + kw - 1) * bytes_per_elem
+    bc = max(8, VMEM_BUDGET_BYTES // max(tile, 1)) if tile else c
+    bc = min(bc, c)
+    # round down to a multiple of 8 (VPU sublane)
+    return max(8, bc - bc % 8) if bc >= 8 else max(1, bc)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "act",
+                                             "interpret"))
+def depthwise(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+              *, stride: int = 1, pad: int = 1, act: str | None = None,
+              interpret: bool = True) -> jax.Array:
+    n, h, wd, c = x.shape
+    kh, kw, _ = w.shape
+    bc = pick_block_c(h, wd, c, kh, kw)
+    return depthwise_conv2d(x, w, bias, stride=stride, pad=pad, act=act,
+                            block_c=bc, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the depthwise kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def depthwise_conv2d_ref(x: jax.Array, w: jax.Array,
+                         bias: jax.Array | None = None, stride: int = 1,
+                         pad: int = 1, act: str | None = None) -> jax.Array:
+    """NHWC depthwise conv via lax with feature_group_count=C."""
+    c = x.shape[-1]
+    kh, kw, cw = w.shape
+    assert cw == c
+    w4 = w.reshape(kh, kw, 1, c)  # HWIO with I=1, groups=C
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w4.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    return out.astype(x.dtype)

@@ -1,0 +1,47 @@
+"""Fused RMSNorm Pallas kernel (used by every assigned LM arch).
+
+One pass over VMEM row blocks: mean-of-squares reduce + rsqrt + scale in a
+single kernel, instead of XLA's reduce -> broadcast -> mul chain that round-
+trips HBM.  Rows map to the grid, the feature dim stays whole in VMEM
+(d_model <= 12288 -> 48 KiB/row fp32, fine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w_ref[...]).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (..., d); w: (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, max(rows, 1))
+    rp = -rows % br
+    xp = jnp.pad(x2, ((0, rp), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((rows + rp) // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((1, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + rp, d), x.dtype),
+        interpret=interpret,
+    )(xp, w.reshape(1, d))
+    return out[:rows].reshape(shape)

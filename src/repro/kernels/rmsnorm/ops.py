@@ -1,0 +1,21 @@
+"""jit'd RMSNorm entry point with XLA fallback (dry-run path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas",
+                                             "interpret"))
+def rms_norm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+             use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return rmsnorm(x, w, eps=eps, interpret=interpret)
+    return rmsnorm_ref(x, w, eps)
+
+
+__all__ = ["rms_norm", "rmsnorm", "rmsnorm_ref"]

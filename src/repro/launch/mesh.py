@@ -1,0 +1,34 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  Shapes:
+  single pod:  (data=16, model=16)           — 256 chips (one v5e pod)
+  multi pod:   (pod=2, data=16, model=16)    — 512 chips
+
+The 'pod' axis carries only data parallelism (gradient all-reduce across the
+slower inter-pod links); params are replicated across pods and FSDP-sharded
+over 'data' within a pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic re-meshing."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

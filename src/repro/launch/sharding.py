@@ -1,0 +1,293 @@
+"""Sharding rules (DESIGN.md §5): MaxText-style logical rules with a
+divisibility guard.
+
+Plan (mesh axes: optional 'pod', 'data', 'model'):
+  * TP over 'model': attention heads / q-dim, FFN hidden, vocab.
+  * FSDP over 'data': the d_model dim of every weight matrix.
+  * 'pod' carries pure data parallelism (batch); params replicated across
+    pods (inter-pod links are the slow tier).
+  * KV caches: batch over 'data', then heads over 'model' when divisible,
+    else sequence over 'model' (split-K decode; DESIGN.md §5).
+
+``sanitize`` drops a mesh axis from a spec whenever the corresponding dim is
+not divisible (e.g. qwen2-0.5b's 14 heads, granite-moe's vocab 49155) —
+recorded in the dry-run output as a fallback, not a failure.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axsize(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def sanitize(shape: tuple[int, ...], spec: P, mesh: Mesh,
+             fallbacks: list | None = None) -> P:
+    """Drop axes that don't exist in the mesh or don't divide the dim.
+    A tuple axis that fails degrades to its largest working member."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                       - len(spec))):
+        size = _axsize(mesh, ax)
+        if ax is not None and size and dim % size == 0:
+            out.append(ax)
+            continue
+        if isinstance(ax, tuple):
+            pick = None
+            for member in sorted(ax, key=lambda a: -_axsize(mesh, a)):
+                ms = _axsize(mesh, member)
+                if ms and dim % ms == 0:
+                    pick = member
+                    break
+            if pick is not None:
+                if fallbacks is not None:
+                    fallbacks.append((shape, ax, dim))
+                out.append(pick)
+                continue
+        if ax is not None and fallbacks is not None and size != 0:
+            fallbacks.append((shape, ax, dim))
+        out.append(None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh):
+    from repro.lm import pshard
+    names = (("pod", "data", "model") if pshard.dp_only()
+             else ("pod", "data"))
+    axes = tuple(a for a in names if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Hillclimb knobs (EXPERIMENTS.md §Perf).
+
+    fsdp: shard weight d_model dims over 'data' (ZeRO-3 style).  Worth it
+      only when params+opt exceed HBM; for small models the per-microbatch
+      weight all-gathers dominate the step (observed 227x the compute term
+      on qwen2-0.5b train).
+    feature_2d: serving-only — shard weight *feature* dims over
+      ('data','model') combined (256-way TP).  Removes the per-layer
+      weight all-gathers from decode at the cost of tiny per-layer
+      activation all-reduces.
+    """
+    fsdp: bool = True
+    feature_2d: bool = False
+    dp_only: bool = False   # pure data parallelism: weights replicated,
+    #                         batch over every mesh axis (small models)
+    zero1: bool = False     # shard optimizer moments over 'model' even
+    #                         when params are replicated (ZeRO-1)
+    embed_fsdp: bool = False  # shard the embedding table (vocab over
+    #                           'data'); costs one table all-gather per
+    #                           microbatch, saves ~2.6 GB/device at 104B
+    grads_bf16: bool = False  # accumulate microbatch grads in bf16
+
+
+DEFAULT_POLICY = ShardingPolicy()
+
+
+def auto_policy(param_count: int, kind: str, model_axis: int = 16,
+                hbm_bytes: float = 16 * 1024 ** 3) -> ShardingPolicy:
+    """Pick the sharding policy from the model's memory needs (the
+    optimized path; baseline uses DEFAULT_POLICY)."""
+    if kind == "train":
+        # params bf16 + grads f32 + adam m,v f32, TP-sharded only
+        need = param_count * (2 + 4 + 8) / model_axis
+        return ShardingPolicy(fsdp=need > 0.45 * hbm_bytes)
+    # serving: no optimizer state; 2D feature sharding when TP-only
+    # weights would crowd out the KV cache
+    need = param_count * 2 / model_axis
+    return ShardingPolicy(fsdp=False, feature_2d=need > 0.2 * hbm_bytes)
+
+
+# --------------------------------------------------------------------------
+# Parameter rules, keyed by pytree path
+# --------------------------------------------------------------------------
+def _apply_policy(spec: P, policy: ShardingPolicy) -> P:
+    if policy.dp_only:
+        return P(*([None] * len(spec)))
+    out = []
+    for ax in spec:
+        if ax == "data" and not policy.fsdp:
+            out.append(None)
+        elif ax == "model" and policy.feature_2d:
+            out.append(("data", "model"))
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _param_rule(path: str, ndim: int) -> P:
+    """Logical spec by leaf name; leading 'L' (stacked layers) is never
+    sharded.  Written for unstacked rank; a stacked leaf gets None prepended
+    by the caller."""
+    name = path.split("/")[-1]
+    stacked = path.startswith("blocks") or path.startswith("enc_blocks") \
+        or path.startswith("cross_blocks")
+    lead = (None,) if stacked else ()
+    moe = "/mlp/" in path and name in ("wg", "wu", "wd") and \
+        ndim == len(lead) + 3
+    shared_moe = "/shared/" in path
+    if name == "embed":
+        # vocab replicated (keeps the token gather local), d_model over
+        # 'model' so the gather output (batch->data, d->model) lines up
+        # with the activation layout — FSDP'ing d over 'data' here collides
+        # with the batch axis and forces involuntary rematerialization.
+        # (policy.embed_fsdp shards vocab over 'data' instead: one table
+        # all-gather per microbatch, applied in _apply_policy2.)
+        return P(None, "model")
+    if name == "lm_head":
+        return P("data", "model")
+    if name in ("wq", "wk", "wv") and not moe:
+        return P(*lead, "data", "model")
+    if name == "wo":
+        return P(*lead, "model", "data")
+    if name in ("bq", "bk", "bv"):
+        return P(*lead, "model")
+    if name == "router":
+        return P(*lead, "data", None)
+    if (moe or shared_moe) and name in ("wg", "wu"):
+        return P(*lead, "model", "data", None)   # experts over model (EP)
+    if (moe or shared_moe) and name == "wd":
+        return P(*lead, "model", None, "data")
+    if name in ("wg", "wu"):                      # dense mlp
+        return P(*lead, "data", "model")
+    if name == "wd":
+        return P(*lead, "model", "data")
+    if name == "in_proj":                         # mamba2
+        return P(*lead, "data", "model")
+    if name == "out_proj":
+        return P(*lead, "model", "data")
+    if name == "w_gates":                         # mlstm
+        return P(*lead, "data", None)
+    if name == "enc_pos":
+        return P(None, "data")
+    return P()                                    # norms, biases, conv_w
+
+
+def _ep_fallback(spec: P, shape, mesh) -> P:
+    """MoE fallback: if experts don't divide 'model', shard the FFN dim
+    instead (granite-moe: 40 experts on a 16-way axis)."""
+    if len(shape) >= 3 and spec and spec[len(spec) - 3] == "model":
+        e_dim = shape[-3]
+        if e_dim % _axsize(mesh, "model") != 0:
+            # move 'model' to the F dim: (..., E, D, F) or (..., E, F, D)
+            lead = (None,) * (len(shape) - 3)
+            if spec[-1] is None:      # (E, D, F) case: wg/wu
+                return P(*lead, None, "data", "model")
+            return P(*lead, None, "model", "data")
+    return spec
+
+
+def param_specs(params_tree, mesh: Mesh, fallbacks: list | None = None,
+                policy: ShardingPolicy = DEFAULT_POLICY):
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS)."""
+    def visit(path_parts, leaf):
+        path = "/".join(str(p) for p in path_parts)
+        spec = _param_rule(path, leaf.ndim)
+        if path.endswith("embed") and policy.embed_fsdp:
+            spec = P("data", "model")
+        spec = _ep_fallback(spec, leaf.shape, mesh)
+        spec = _apply_policy(spec, policy)
+        # pad/truncate spec to rank
+        spec = P(*(tuple(spec) + (None,) * leaf.ndim)[:leaf.ndim])
+        return sanitize(leaf.shape, spec, mesh, fallbacks)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, l: visit([_key(k) for k in kp], l), params_tree)
+
+
+def _key(k):
+    if hasattr(k, "key"):
+        return k.key
+    if hasattr(k, "idx"):
+        return k.idx
+    return str(k)
+
+
+# --------------------------------------------------------------------------
+# Activation / state rules
+# --------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+    return P(*((batch_axes(mesh),) + (None,) * (ndim - 1)))
+
+
+def cache_specs(cache_tree, mesh: Mesh, fallbacks=None):
+    """DecodeCache sharding: KV (L,B,H,S,D): batch->data(+pod), heads->model
+    if divisible else sequence->model; SSM state (L,B,H,P,N): heads->model.
+    """
+    b_ax = batch_axes(mesh)
+    msize = _axsize(mesh, "model")
+
+    def visit(path_parts, leaf):
+        name = "/".join(str(_key(k)) for k in path_parts)
+        if leaf is None:
+            return None
+        if leaf.ndim == 5 and ("kv" in name or "shared" in name
+                               or "cross" in name):
+            L, B, H, S, D = leaf.shape
+            if H % msize == 0:
+                spec = P(None, b_ax, "model", None, None)
+            else:
+                spec = P(None, b_ax, None, "model", None)
+            return sanitize(leaf.shape, spec, mesh, fallbacks)
+        if leaf.ndim == 5 and "ssm" in name:
+            spec = P(None, b_ax, "model", None, None)
+            return sanitize(leaf.shape, spec, mesh, fallbacks)
+        if leaf.ndim >= 2:
+            return sanitize(leaf.shape, P(None, b_ax), mesh, fallbacks)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, l: visit(kp, l), cache_tree,
+        is_leaf=lambda x: x is None)
+
+
+def opt_state_specs(opt_state, pspecs, mesh: Mesh):
+    """Adam moments shard like their parameters; step scalar replicated."""
+    def visit(leaf, ref_tree=None):
+        return leaf
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=P(), m=pspecs, v=pspecs)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def zero1_specs(params_tree, mesh: Mesh):
+    """ZeRO-1: optimizer-moment specs — shard each leaf's largest divisible
+    dim over 'model' (params themselves stay replicated)."""
+    msize = _axsize(mesh, "model")
+
+    def visit(leaf):
+        if leaf.ndim == 0 or not msize:
+            return P()
+        dims = list(leaf.shape)
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] % msize == 0:
+                spec = [None] * len(dims)
+                spec[i] = "model"
+                return P(*spec)
+        return P()
+
+    return jax.tree.map(visit, params_tree)

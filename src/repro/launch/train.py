@@ -1,0 +1,64 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --steps 100 --ckpt-dir /tmp/ckpt [--resume]
+
+Wires the fault-tolerant TrainRunner (checkpoints, recovery, straggler
+accounting) to any registered architecture; ``--smoke`` selects the reduced
+config (CPU-runnable), otherwise the full config is used (requires a pod).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs.registry import ARCH_IDS, get_arch, get_smoke
+from repro.data.pipeline import DataConfig
+from repro.train.optimizer import AdamW
+from repro.train.runner import RunnerConfig, TrainRunner
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    rcfg = RunnerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                        max_steps=args.steps,
+                        microbatches=args.microbatches)
+    opt = AdamW(lr=args.lr, total_steps=args.steps,
+                warmup_steps=max(1, args.steps // 10))
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                          global_batch=args.global_batch)
+    runner = TrainRunner(cfg, rcfg, optimizer=opt, data_cfg=data_cfg)
+    if not args.resume:
+        import shutil
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    out = runner.run()
+    print(f"[train] arch={cfg.name} steps={out['final_step']} "
+          f"loss={out['final_loss']:.4f} recoveries={out['recoveries']} "
+          f"stragglers={out['stragglers']}")
+    for m in out["metrics"][:: max(1, len(out["metrics"]) // 10)]:
+        print(f"  step {m['step']:>5}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  {m['step_time_s']*1e3:.0f} ms")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(out, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,443 @@
+"""Model assembly for the 10 assigned architectures.
+
+One ``init_params(cfg, key)`` + ``forward(params, batch, cfg)`` pair covers
+all families; layer stacks are scanned (stacked leading L axis) so the HLO
+is O(1) in depth — essential for the 64/80-layer dry-run compiles.
+
+Decode (``decode_step``) carries an explicit cache pytree:
+  transformer: stacked (L, B, Hkv, S_max, Dh) K/V
+  mamba2/mlstm: stacked SSM state (+ conv tail)
+  zamba2 hybrid: SSM stack + per-application shared-attention KV
+  whisper: decoder self-KV + precomputed cross-KV
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.config import ArchConfig
+from repro.lm.modules import (KVCache, attention_scores, cross_attention,
+                              gelu_mlp, gqa_attention, layer_norm, moe_block,
+                              rms_norm, swiglu_mlp)
+from repro.lm.pshard import BATCH, MODEL, hint
+from repro.lm.ssm import SSMState, mamba2_block, mamba2_dims, mlstm_block
+
+INIT_SCALE = 0.02
+
+
+# ==========================================================================
+# Parameter initialisation
+# ==========================================================================
+def _dense(key, shape, dtype, scale=INIT_SCALE):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def _attn_params(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense(ks[0], (cfg.d_model, cfg.q_dim), dtype),
+         "wk": _dense(ks[1], (cfg.d_model, cfg.kv_dim), dtype),
+         "wv": _dense(ks[2], (cfg.d_model, cfg.kv_dim), dtype),
+         "wo": _dense(ks[3], (cfg.q_dim, cfg.d_model), dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _mlp_params(key, cfg: ArchConfig, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"wg": _dense(ks[0], (cfg.d_model, d_ff), dtype),
+            "wu": _dense(ks[1], (cfg.d_model, d_ff), dtype),
+            "wd": _dense(ks[2], (d_ff, cfg.d_model), dtype)}
+
+
+def _moe_params(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 7)
+    e, f, d = cfg.moe_experts, cfg.d_ff, cfg.d_model
+    p = {"router": _dense(ks[0], (d, e), dtype),
+         "wg": _dense(ks[1], (e, d, f), dtype),
+         "wu": _dense(ks[2], (e, d, f), dtype),
+         "wd": _dense(ks[3], (e, f, d), dtype)}
+    if cfg.moe_shared:
+        s = cfg.moe_shared
+        p["shared"] = {"wg": _dense(ks[4], (s, d, f), dtype),
+                       "wu": _dense(ks[5], (s, d, f), dtype),
+                       "wd": _dense(ks[6], (s, f, d), dtype)}
+    return p
+
+
+def _block_params(key, cfg: ArchConfig, dtype):
+    """One layer's params (unstacked)."""
+    if cfg.block_type == "transformer":
+        ka, km = jax.random.split(key)
+        p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+             "ln2": jnp.ones((cfg.d_model,), dtype),
+             "attn": _attn_params(ka, cfg, dtype)}
+        p["mlp"] = (_moe_params(km, cfg, dtype) if cfg.family == "moe"
+                    else _mlp_params(km, cfg, dtype))
+        return p
+    if cfg.block_type == "mamba2":
+        din, nh, hp, ns = mamba2_dims(cfg)
+        ks = jax.random.split(key, 3)
+        zdim = 2 * din + 2 * ns + nh
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "in_proj": _dense(ks[0], (cfg.d_model, zdim), dtype),
+                "conv_w": _dense(ks[1], (cfg.ssm_conv, din + 2 * ns), dtype,
+                                 0.2),
+                "dt_bias": jnp.zeros((nh,), dtype),
+                "a_log": jnp.zeros((nh,), jnp.float32),
+                "d_skip": jnp.ones((din,), dtype),
+                "out_proj": _dense(ks[2], (din, cfg.d_model), dtype)}
+    if cfg.block_type == "mlstm":
+        din, nh = cfg.d_inner, cfg.ssm_heads
+        ks = jax.random.split(key, 5)
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "wq": _dense(ks[0], (cfg.d_model, din), dtype),
+                "wk": _dense(ks[1], (cfg.d_model, din), dtype),
+                "wv": _dense(ks[2], (cfg.d_model, din), dtype),
+                "w_gates": _dense(ks[3], (cfg.d_model, 2 * nh), dtype),
+                "wo": _dense(ks[4], (din, cfg.d_model), dtype)}
+    raise ValueError(cfg.block_type)
+
+
+def _stacked_blocks(key, cfg: ArchConfig, n: int, dtype):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_params(k, cfg, dtype))(keys)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "embed": _dense(ks[0], (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": _stacked_blocks(ks[1], cfg, cfg.n_layers, dtype),
+    }
+    # Execution always carries a separate lm_head, even for tied configs
+    # (initialised from the same key as the embedding).  A literal
+    # ``embed.T`` head inherits the gather-friendly (vocab-replicated,
+    # d->model) embedding sharding, whose transpose forces replicated
+    # full-vocab logits (~20 GB/device observed).  Tying still counts once
+    # in cfg.param_count(); deviation recorded in DESIGN.md §7.
+    p["lm_head"] = _dense(ks[2] if not cfg.tie_embeddings else ks[0],
+                          (cfg.d_model, cfg.padded_vocab), dtype)
+    if cfg.attn_every:                       # zamba2 shared attn+mlp block
+        p["shared_attn"] = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                            "ln2": jnp.ones((cfg.d_model,), dtype),
+                            "attn": _attn_params(ks[3], cfg, dtype),
+                            "mlp": _mlp_params(ks[4], cfg, dtype)}
+    if cfg.encoder_decoder:
+        enc_cfg = dataclasses.replace(cfg, qkv_bias=False,
+                                      block_type="transformer",
+                                      family="dense")
+        p["enc_blocks"] = _stacked_blocks(ks[5], enc_cfg, cfg.enc_layers,
+                                          dtype)
+        p["enc_pos"] = _dense(ks[6], (cfg.enc_positions, cfg.d_model), dtype)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        cross = jax.vmap(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), dtype),
+            "attn": _attn_params(k, cfg, dtype)})(
+                jax.random.split(ks[7], cfg.n_layers))
+        p["cross_blocks"] = cross
+    return p
+
+
+# ==========================================================================
+# Forward (training / prefill)
+# ==========================================================================
+def _transformer_layer(lp, x, cfg, positions, positions3, causal=True):
+    h, _ = gqa_attention(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                         cfg, positions, positions3=positions3,
+                         causal=causal)
+    x = x + h
+    inner = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe_block(lp["mlp"], inner, cfg)
+    else:
+        x = x + swiglu_mlp(lp["mlp"], inner)
+    return x
+
+
+def _ssm_layer(lp, x, cfg, state=None):
+    block = mamba2_block if cfg.block_type == "mamba2" else mlstm_block
+    h, new_state = block(lp, rms_norm(x, lp["ln"], cfg.norm_eps), cfg, state)
+    return x + h, new_state
+
+
+def _shared_attn_apply(sp, x, cfg, positions):
+    h, _ = gqa_attention(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps),
+                         cfg, positions)
+    x = x + h
+    x = x + swiglu_mlp(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return x
+
+
+def encode(params, cfg: ArchConfig, enc_input: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    x = enc_input + params["enc_pos"][None, :enc_input.shape[1]]
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        return _transformer_layer(lp, h, cfg, positions, None,
+                                  causal=False), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _inner_group_size(L: int) -> int:
+    """Largest divisor of L not exceeding ~sqrt(L) (2-level remat)."""
+    best = 1
+    d = 1
+    while d * d <= L * 4:
+        if L % d == 0 and d * d <= L * 2:
+            best = d
+        d += 1
+    return best
+
+
+def scan_layers(body, x, xs, L: int, remat: bool):
+    """Scan over L layers with 2-level (sqrt-L) rematerialisation.
+
+    A flat rematted scan saves every layer's input — (L, B, S, D) ~6.4 GB
+    per device for the 64-layer 12288-wide config.  Grouping layers into
+    ~sqrt(L) chunks and checkpointing the *group* keeps only group-boundary
+    carries plus one group's transient residuals (~6x smaller there)."""
+    inner = _inner_group_size(L) if (remat and L >= 16) else 0
+    if not inner or inner < 2:
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, xs)
+        return x
+    outer = L // inner
+    xs2 = jax.tree.map(
+        lambda a: a.reshape((outer, inner) + a.shape[1:]), xs)
+    inner_body = jax.checkpoint(body)   # nested: per-layer residuals are
+    #                                     recomputed, only carries saved
+
+    @jax.checkpoint
+    def group(h, chunk):
+        h, _ = jax.lax.scan(inner_body, h, chunk)
+        return h, None
+
+    x, _ = jax.lax.scan(group, x, xs2)
+    return x
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array,
+            positions3: jax.Array | None = None,
+            enc_input: jax.Array | None = None,
+            extra_embeds: jax.Array | None = None,
+            remat: bool = True) -> jax.Array:
+    """tokens: (B, S) -> logits (B, S, vocab)."""
+    B, S = tokens.shape
+    x = hint(params["embed"][tokens], BATCH, None, None)
+    if extra_embeds is not None:              # vlm stub: patch embeddings
+        n = extra_embeds.shape[1]
+        x = x.at[:, :n].add(extra_embeds.astype(x.dtype))
+    positions = jnp.arange(S)
+    memory = (encode(params, cfg, enc_input)
+              if cfg.encoder_decoder else None)
+
+    if cfg.block_type == "transformer" and not cfg.encoder_decoder:
+        def body(h, lp):
+            return _transformer_layer(lp, h, cfg, positions, positions3), None
+        x = scan_layers(body, x, params["blocks"], cfg.n_layers, remat)
+    elif cfg.encoder_decoder:
+        def body(h, lps):
+            lp, cp = lps
+            att, _ = gqa_attention(
+                lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                positions)
+            h = h + att
+            h = h + cross_attention(cp["attn"],
+                                    rms_norm(h, cp["ln"], cfg.norm_eps),
+                                    memory, cfg)
+            h = h + swiglu_mlp(lp["mlp"],
+                               rms_norm(h, lp["ln2"], cfg.norm_eps))
+            return h, None
+        x = scan_layers(body, x, (params["blocks"], params["cross_blocks"]),
+                        cfg.n_layers, remat)
+    else:                                     # mamba2 / mlstm / hybrid
+        k_every = cfg.attn_every
+        sp = params.get("shared_attn")
+
+        def body(carry, inp):
+            h = carry
+            li, lp = inp
+            h, _ = _ssm_layer(lp, h, cfg)
+            if k_every:
+                h = jax.lax.cond(
+                    (li + 1) % k_every == 0,
+                    lambda hh: _shared_attn_apply(sp, hh, cfg, positions),
+                    lambda hh: hh, h)
+            return h, None
+        x = scan_layers(body, x, (jnp.arange(cfg.n_layers),
+                                  params["blocks"]), cfg.n_layers, remat)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hint(jnp.einsum("bsd,dv->bsv", x, params["lm_head"]),
+                BATCH, None, MODEL)
+
+
+# ==========================================================================
+# Decode (single new token against a cache)
+# ==========================================================================
+class DecodeCache(NamedTuple):
+    kv_k: jax.Array | None      # (L, B, Hkv, S_max, Dh)
+    kv_v: jax.Array | None
+    ssm: jax.Array | None       # (L, B, H, P, N)
+    conv: jax.Array | None      # (L, B, K-1, C)
+    shared_k: jax.Array | None  # (n_apps, B, Hkv, S_max, Dh)  (zamba2)
+    shared_v: jax.Array | None
+    cross_k: jax.Array | None   # (L, B, H, M, Dh)  (whisper)
+    cross_v: jax.Array | None
+    pos: jax.Array              # scalar int32: tokens already cached
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.float32, memory: jax.Array | None = None,
+               params=None, kv_dtype=None) -> DecodeCache:
+    """``kv_dtype=jnp.int8`` stores the self-attention KV quantized
+    (static-scale, see modules.quantize_kv); activations/cross/shared
+    caches stay in ``dtype``."""
+    L = cfg.n_layers
+    mk = lambda *s: jnp.zeros(s, dtype)
+    kv_k = kv_v = ssm = conv = sk = sv = ck = cv = None
+    if cfg.block_type == "transformer":
+        kvd = kv_dtype or dtype
+        kv_k = jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                         kvd)
+        kv_v = jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                         kvd)
+    else:
+        din, nh, hp, ns = mamba2_dims(cfg)
+        if cfg.block_type == "mlstm":
+            nh, hp, ns = cfg.ssm_heads, cfg.d_inner // cfg.ssm_heads + 1, \
+                cfg.d_inner // cfg.ssm_heads
+            ssm = jnp.zeros((L, batch, nh, hp, ns), jnp.float32)
+        else:
+            ssm = jnp.zeros((L, batch, nh, hp, ns), jnp.float32)
+            conv = mk(L, batch, cfg.ssm_conv - 1, din + 2 * ns)
+    if cfg.attn_every:
+        n_apps = cfg.n_layers // cfg.attn_every
+        sk = mk(n_apps, batch, cfg.n_kv_heads, max_len, cfg.d_head)
+        sv = mk(n_apps, batch, cfg.n_kv_heads, max_len, cfg.d_head)
+    if cfg.encoder_decoder:
+        assert memory is not None and params is not None
+        m = memory.shape[1]
+
+        def one(cp):
+            k = jnp.einsum("bmd,dk->bmk", memory, cp["attn"]["wk"]).reshape(
+                batch, m, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            v = jnp.einsum("bmd,dk->bmk", memory, cp["attn"]["wv"]).reshape(
+                batch, m, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            return k.astype(dtype), v.astype(dtype)
+        ck, cv = jax.vmap(one)(params["cross_blocks"])
+    return DecodeCache(kv_k, kv_v, ssm, conv, sk, sv, ck, cv,
+                       jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array,
+                cache: DecodeCache,
+                positions3: jax.Array | None = None):
+    """token: (B, S) with S >= 1 -> (logits (B, S, V), new cache).
+
+    S == 1 is the serve_step; S > 1 is chunked prefill (the dual-mesh
+    load-balance knob, DESIGN.md §2)."""
+    B, S = token.shape
+    x = hint(params["embed"][token], BATCH, None, None)
+    pos = cache.pos
+    positions = pos + jnp.arange(S)
+
+    # NOTE on cache plumbing: the stacked KV cache flows through the layer
+    # scan as xs/ys.  A carried-buffer + in-place-DUS variant was tried and
+    # reverted: GSPMD loses the carry's sharding through the while loop and
+    # replicates the whole cache (+80 GB/device).  The xs/ys form keeps the
+    # sharding but double-buffers the stack on the CPU backend's memory
+    # analysis; see EXPERIMENTS.md §Perf (KV-int8 hillclimb).
+    if cfg.block_type == "transformer" and not cfg.encoder_decoder:
+        def body(h, lps):
+            lp, ck, cv = lps
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            att, nc = gqa_attention(lp["attn"], hn, cfg, positions,
+                                    cache=KVCache(ck, cv), cache_pos=pos,
+                                    positions3=positions3)
+            h = h + att
+            inner = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + (moe_block(lp["mlp"], inner, cfg)
+                     if cfg.family == "moe" else swiglu_mlp(lp["mlp"], inner))
+            return h, (nc.k, nc.v)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache.kv_k, cache.kv_v))
+        cache = cache._replace(kv_k=nk, kv_v=nv)
+    elif cfg.encoder_decoder:
+        def body(h, lps):
+            lp, cp, ck, cv, xk, xv = lps
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            att, nc = gqa_attention(lp["attn"], hn, cfg, positions,
+                                    cache=KVCache(ck, cv), cache_pos=pos)
+            h = h + att
+            # cross attention against precomputed encoder K/V
+            hq = rms_norm(h, cp["ln"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dq->bsq", hq, cp["attn"]["wq"]).reshape(
+                B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            xo = attention_scores(q, xk, xv, causal=False, q_offset=0)
+            xo = xo.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+            h = h + jnp.einsum("bsq,qd->bsd", xo, cp["attn"]["wo"])
+            inner = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + swiglu_mlp(lp["mlp"], inner)
+            return h, (nc.k, nc.v)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], params["cross_blocks"],
+                      cache.kv_k, cache.kv_v, cache.cross_k, cache.cross_v))
+        cache = cache._replace(kv_k=nk, kv_v=nv)
+    else:
+        k_every = cfg.attn_every
+        sp = params.get("shared_attn")
+        sk, sv = cache.shared_k, cache.shared_v
+
+        def body(carry, inp):
+            h, sk, sv = carry
+            li, lp, s, cv_ = inp
+            st = SSMState(s, cv_)
+            h, ns = _ssm_layer(lp, h, cfg, st)
+            if k_every:
+                app = li // k_every
+
+                def apply(args):
+                    hh, sk, sv = args
+                    hn = rms_norm(hh, sp["ln1"], cfg.norm_eps)
+                    att, nc = gqa_attention(
+                        sp["attn"], hn, cfg, positions,
+                        cache=KVCache(sk[app], sv[app]), cache_pos=pos)
+                    hh = hh + att
+                    hh = hh + swiglu_mlp(sp["mlp"], rms_norm(
+                        hh, sp["ln2"], cfg.norm_eps))
+                    return (hh, sk.at[app].set(nc.k), sv.at[app].set(nc.v))
+
+                h, sk, sv = jax.lax.cond(
+                    (li + 1) % k_every == 0, apply,
+                    lambda a: a, (h, sk, sv))
+            return (h, sk, sv), (ns.s, ns.conv if ns.conv is not None
+                                 else jnp.zeros((B, 0, 0)))
+        conv_in = (cache.conv if cache.conv is not None
+                   else jnp.zeros((cfg.n_layers, B, 0, 0)))
+        (x, sk, sv), (ns, nconv) = jax.lax.scan(
+            body, (x, sk if sk is not None else jnp.zeros((1,)),
+                   sv if sv is not None else jnp.zeros((1,))),
+            (jnp.arange(cfg.n_layers), params["blocks"], cache.ssm,
+             conv_in))
+        cache = cache._replace(
+            ssm=ns, conv=nconv if cache.conv is not None else None,
+            shared_k=sk if cache.shared_k is not None else None,
+            shared_v=sv if cache.shared_v is not None else None)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = hint(jnp.einsum("bsd,dv->bsv", x, params["lm_head"]),
+                  BATCH, None, MODEL)
+    return logits, cache._replace(pos=cache.pos + S)

@@ -1,0 +1,351 @@
+"""Transformer building blocks shared by all assigned architectures.
+
+Pure functions over explicit param pytrees (no framework): GQA attention
+(with optional QKV bias and KV cache), RoPE / M-RoPE, SwiGLU MLP, and the
+scatter-dispatch MoE (shared + routed top-k experts).
+
+All matmuls keep weights in the layout (d_in, d_out) so TP sharding rules
+('model' on d_out for up-projections, on d_in for down-projections) apply
+uniformly (see repro.launch.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.lm.pshard import BATCH, MODEL, hint
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps=1e-6):
+    return rmsnorm_ref(x, w, eps)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings (RoPE + qwen2-vl M-RoPE)
+# --------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float, positions: jax.Array) -> tuple:
+    """positions: (..., S) int -> cos/sin (..., S, d_head//2) f32."""
+    half = d_head // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, None]          # (B, 1, S, D/2)
+    sin = sin[:, None]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_freqs(d_head: int, theta: float, positions3: jax.Array,
+                sections: tuple[int, ...]) -> tuple:
+    """qwen2-vl M-RoPE: positions3 (B, 3, S) (t/h/w); the d_head//2 rotary
+    dims are split into ``sections`` bands, each driven by one position
+    stream.  For text-only input all three streams are equal and M-RoPE
+    reduces to RoPE (property-tested)."""
+    half = d_head // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    cos_parts, sin_parts = [], []
+    start = 0
+    for band, sec in enumerate(sections):
+        pos = positions3[:, band].astype(jnp.float32)          # (B, S)
+        ang = pos[..., None] * inv[start:start + sec]          # (B, S, sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    return (jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1))
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional bias, optional KV cache)
+# --------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, Hkv, S_max, Dh)
+    v: jax.Array
+
+
+import os
+# Query-block size of the chunked attention — the Eq.2 "input size per PE"
+# analogue on the LM side: bounds score memory at O(Q_CHUNK x Sk).
+# Env-tunable for §Perf sweeps.
+Q_CHUNK = int(os.environ.get("REPRO_Q_CHUNK", "512"))
+
+# Static symmetric scales for int8 KV quantization (KIVI-style, but with
+# calibration folded to a constant: post-rope k/v are ~N(0,1) at our init;
+# production would calibrate per channel).  q and p are quantized on the
+# fly so the dots run int8 x int8 -> s32 — no bf16 dequantised copy of the
+# cache is ever materialised (the point of the optimization).
+KV_SCALE = 32.0
+Q_SCALE = 32.0
+P_SCALE = 127.0
+
+
+def quantize_kv(x: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def _attn_block(qg, k, v, q_pos, causal, kv_valid):
+    """One query block: qg (B,Hkv,G,bq,D) vs full k/v (B,Hkv,Sk,D).
+
+    K/V stay in their storage dtype with fp32/s32 accumulation via
+    preferred_element_type — upcasting the whole KV cache materialises a
+    fp32 copy of it per layer (observed 5.4 GB/device on the 32k decode
+    cells).  int8 caches run both dots in int8."""
+    sk = k.shape[2]
+    int8_kv = k.dtype == jnp.int8
+    if int8_kv:
+        qq = jnp.clip(jnp.round(qg.astype(jnp.float32) * Q_SCALE),
+                      -127, 127).astype(jnp.int8)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qq, k,
+                       preferred_element_type=jnp.int32)
+        s = s.astype(jnp.float32) / (Q_SCALE * KV_SCALE)
+    else:
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(k.dtype), k,
+                       preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((qg.shape[3], sk), bool)
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]
+    if kv_valid is not None:
+        mask = mask[None] & (k_pos[None, None, :] < kv_valid[:, None, None])
+        s = jnp.where(mask[:, None, None], s, -1e30)
+    else:
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if int8_kv:
+        pq = jnp.round(p * P_SCALE).astype(jnp.int8)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", pq, v,
+                         preferred_element_type=jnp.int32)
+        return out.astype(jnp.float32) / (P_SCALE * KV_SCALE)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def attention_scores(q, k, v, causal: bool, q_offset=None,
+                     kv_valid: jax.Array | None = None):
+    """GQA attention used by the lowered (XLA) path.
+
+    q: (B,Hq,Sq,D), k/v: (B,Hkv,Sk,D).  ``q_offset`` positions the query
+    block inside the kv sequence (decode / chunked prefill); ``kv_valid``
+    masks the cache tail.
+
+    Long query sequences are processed in Q_CHUNK blocks via lax.scan (the
+    flash-attention discipline in pure XLA): peak score memory is
+    O(bq x Sk) instead of O(Sq x Sk), which is what makes the 32k train /
+    prefill cells fit (the Pallas flash kernel is the on-hardware path;
+    this is its XLA twin for the CPU-backend dry-run)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32) / (d ** 0.5)
+    qg = qf.reshape(b, hkv, g, sq, d)   # grouped: no KV duplication
+    off = q_offset if q_offset is not None else sk - sq
+    if sq <= Q_CHUNK:
+        out = _attn_block(qg, k, v, jnp.arange(sq) + off, causal, kv_valid)
+        return out.reshape(b, hq, sq, d).astype(q.dtype)
+    nq = -(-sq // Q_CHUNK)
+    pad = nq * Q_CHUNK - sq
+    qp = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    qp = qp.reshape(b, hkv, g, nq, Q_CHUNK, d)
+
+    # checkpoint each block: without it the scan's AD saves the softmax
+    # probs (O(S^2) f32) as residuals — recompute them in the backward.
+    blk_fn = jax.checkpoint(
+        lambda blk, pos: _attn_block(blk, k, v, pos, causal, kv_valid))
+
+    def body(_, i):
+        blk = jax.lax.dynamic_index_in_dim(qp, i, axis=3, keepdims=False)
+        pos = i * Q_CHUNK + jnp.arange(Q_CHUNK) + off
+        return None, blk_fn(blk, pos)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, nq * Q_CHUNK, d)
+    return out[:, :, :, :sq].reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def gqa_attention(params: dict, x: jax.Array, cfg, positions: jax.Array,
+                  cache: KVCache | None = None,
+                  cache_pos: jax.Array | None = None,
+                  positions3: jax.Array | None = None,
+                  causal: bool = True):
+    """Full attention block: qkv proj -> rope -> attention -> out proj.
+
+    Returns (out, new_cache).  With a cache, k/v of the current block are
+    written at ``cache_pos`` and attention runs over the whole cache.
+    """
+    b, s, d = x.shape
+    x = hint(x, BATCH, None, None)
+    q = hint(jnp.einsum("bsd,dq->bsq", x, params["wq"]), BATCH, None, MODEL)
+    k = hint(jnp.einsum("bsd,dk->bsk", x, params["wk"]), BATCH, None, MODEL)
+    v = hint(jnp.einsum("bsd,dk->bsk", x, params["wv"]), BATCH, None, MODEL)
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    if cfg.mrope and positions3 is not None:
+        cos, sin = mrope_freqs(cfg.d_head, cfg.rope_theta, positions3,
+                               cfg.mrope_sections)
+    else:
+        cos, sin = rope_freqs(cfg.d_head, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        assert cache_pos is not None
+        k_store = (quantize_kv(k) if cache.k.dtype == jnp.int8
+                   else k.astype(cache.k.dtype))
+        v_store = (quantize_kv(v) if cache.v.dtype == jnp.int8
+                   else v.astype(cache.v.dtype))
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k_store, (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v_store, (0, 0, cache_pos, 0))
+        new_cache = KVCache(ck, cv)
+        kv_valid = jnp.full((b,), cache_pos + s, jnp.int32)
+        out = attention_scores(q, ck, cv, causal=causal, q_offset=cache_pos,
+                               kv_valid=kv_valid)
+    else:
+        out = attention_scores(q, k, v, causal=causal, q_offset=0)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    out = hint(out, BATCH, None, MODEL)
+    return hint(jnp.einsum("bsq,qd->bsd", out, params["wo"]),
+                BATCH, None, None), new_cache
+
+
+def cross_attention(params: dict, x: jax.Array, memory: jax.Array, cfg):
+    """Whisper decoder cross-attention (memory = encoder output)."""
+    b, s, d = x.shape
+    m = memory.shape[1]
+    q = jnp.einsum("bsd,dq->bsq", x, params["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bmd,dk->bmk", memory, params["wk"]).reshape(
+        b, m, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bmd,dk->bmk", memory, params["wv"]).reshape(
+        b, m, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    out = attention_scores(q, k, v, causal=False, q_offset=0)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return jnp.einsum("bsq,qd->bsd", out, params["wo"])
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+# --------------------------------------------------------------------------
+def swiglu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    x = hint(x, BATCH, None, None)
+    gate = jax.nn.silu(hint(jnp.einsum("bsd,df->bsf", x, params["wg"]),
+                            BATCH, None, MODEL))
+    up = hint(jnp.einsum("bsd,df->bsf", x, params["wu"]), BATCH, None, MODEL)
+    return hint(jnp.einsum("bsf,fd->bsd", gate * up, params["wd"]),
+                BATCH, None, None)
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["wu"])
+                    + params.get("bu", 0.0))
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"]) + params.get("bd", 0.0)
+
+
+def moe_block(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """MoE with shared experts (always on) + routed top-k.
+
+    Two dispatch modes:
+      * dense (t <= cfg.moe_dense_threshold, i.e. decode): every expert runs
+        on every token, combined by the gate.  At decode batch sizes the
+        step is bound by reading all expert weights from HBM once, so dense
+        compute costs nothing extra and is drop-free (exactly matches the
+        training router semantics) — the p-class discipline of DESIGN.md §2.
+      * scatter (train/prefill): avoids the O(T*E*C) GShard combine tensor —
+        token ranks within each expert come from a (T, E) cumsum, tokens
+        scatter into an (E, C, D) buffer, experts run a grouped einsum, and
+        results gather back weighted by the router prob.  Memory is
+        O(T*E + E*C*D), sharding over ('data' on T/C, 'model' on E).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                    # (t, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    if t <= cfg.moe_dense_threshold:
+        # dense path: (t, e, f) activations, no drops
+        g_ = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["wg"]))
+        u_ = jnp.einsum("td,edf->tef", xt, params["wu"])
+        y_all = jnp.einsum("tef,efd->ted", g_ * u_, params["wd"])
+        onehot = jax.nn.one_hot(idx, e, dtype=gate.dtype)  # (t, k, e)
+        weights = jnp.einsum("tk,tke->te", gate, onehot)
+        out = jnp.einsum("te,ted->td", weights, y_all)
+        if cfg.moe_shared:
+            sh = params["shared"]
+            gs = jax.nn.silu(jnp.einsum("td,sdf->tsf", xt, sh["wg"]))
+            us = jnp.einsum("td,sdf->tsf", xt, sh["wu"])
+            out = out + jnp.einsum("tsf,sfd->td", gs * us, sh["wd"])
+        return out.reshape(b, s, d).astype(x.dtype)
+
+    cap = max(8, int(cfg.moe_capacity_factor * t * k / e))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)       # (t, k, e)
+    flat = onehot.reshape(t * k, e)
+    rank = jnp.cumsum(flat, axis=0) - flat                 # (t*k, e)
+    rank = jnp.sum(rank * flat, axis=-1).reshape(t, k)     # position in expert
+    keep = rank < cap                                       # capacity drop
+    gate = gate * keep
+
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    buf = buf.at[idx.reshape(-1), jnp.where(keep, rank, cap - 1).reshape(-1)
+                 ].add((xt[:, None, :] * keep[..., None]).reshape(t * k, d))
+    # routed experts: grouped SwiGLU
+    g_ = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
+    u_ = jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    y = jnp.einsum("ecf,efd->ecd", g_ * u_, params["wd"])  # (e, cap, d)
+    out = (y[idx.reshape(-1), jnp.where(keep, rank, 0).reshape(-1)]
+           .reshape(t, k, d) * gate[..., None]).sum(axis=1)
+
+    # shared experts (dense, always on)
+    if cfg.moe_shared:
+        sh = params["shared"]
+        gs = jax.nn.silu(jnp.einsum("td,sdf->tsf", xt, sh["wg"]))
+        us = jnp.einsum("td,sdf->tsf", xt, sh["wu"])
+        out = out + jnp.einsum("tsf,sfd->td", gs * us, sh["wd"])
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_aux_loss(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.moe_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.moe_experts * jnp.sum(frac * imp)

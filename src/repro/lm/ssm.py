@@ -1,0 +1,189 @@
+"""Recurrent blocks: Mamba2 (SSD) and mLSTM (xLSTM), sharing one chunked
+gated-linear scan.
+
+Both are state-space recurrences of the form
+    S_t = a_t * S_{t-1} + b_t (x) u_t          (state:  H x P x N)
+    y_t = <S_t, c_t> (+ D * u_t)
+with per-head scalar decay a_t.  Training/prefill uses a chunked scan:
+within a chunk the contribution is a masked quadratic (attention-like)
+einsum, across chunks a lax.scan carries the state — O(S * chunk) compute,
+which is what makes the ``long_500k`` shape lowerable (DESIGN.md §4).
+Decode is the plain one-step recurrence on a carried state.
+
+Simplifications recorded in DESIGN.md §7:
+  * mLSTM uses the GLA form (sigmoid forget, exp input gate clipped to
+    [-10, 10] instead of the running-max stabiliser; the normaliser is the
+    augmented-v row trick so it shares the SSD scan).
+  * xlstm-350m is built from mLSTM blocks only (the 350M xLSTM is
+    predominantly mLSTM; sLSTM's strictly sequential recurrence does not map
+    to TPU training parallelism).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.pshard import BATCH, MODEL, hint
+
+import os
+# SSD chunk length: the intra-chunk quadratic costs O(S*CHUNK) flops while
+# the cross-chunk scan costs O(S/CHUNK) sequential steps — a §Perf knob
+# (EXPERIMENTS.md, zamba2 chunk sweep).  Env-tunable for the dry-run.
+CHUNK = int(os.environ.get("REPRO_SSD_CHUNK", "128"))
+
+
+class SSMState(NamedTuple):
+    s: jax.Array          # (B, H, P, N) state
+    conv: jax.Array | None  # (B, K-1, C) conv tail (mamba2 only)
+
+
+# --------------------------------------------------------------------------
+# Shared chunked gated-linear scan
+# --------------------------------------------------------------------------
+def chunked_gla_scan(log_a, u, b, c, s0):
+    """log_a: (B,S,H) per-head log decay (<= 0 for mamba2);
+    u: (B,S,H,P) inputs; b: (B,S,H,N) write keys; c: (B,S,H,N) read keys;
+    s0: (B,H,P,N) initial state.
+    Returns y: (B,S,H,P), s_final.
+    """
+    B, S, H = log_a.shape
+    P, N = u.shape[-1], b.shape[-1]
+    Lc = min(CHUNK, S)
+    pad = -S % Lc
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // Lc
+
+    def reshape_chunks(x):
+        return x.reshape((B, nc, Lc) + x.shape[2:]).swapaxes(0, 1)
+
+    la, uc, bc, cc = map(reshape_chunks, (log_a, u, b, c))
+
+    def chunk_step(s_prev, inp):
+        la_, u_, b_, c_ = inp                       # (B,Lc,H,...)
+        cum = jnp.cumsum(la_, axis=1)               # (B,Lc,H)
+        total = cum[:, -1]                          # (B,H)
+        # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) <c_i, b_j> u_j
+        decay = cum[:, :, None, :] - cum[:, None, :, :]     # (B,i,j,H)
+        mask = (jnp.arange(Lc)[:, None] >= jnp.arange(Lc)[None, :])
+        w = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", c_, b_) * w
+        y = jnp.einsum("bijh,bjhp->bihp", scores, u_)
+        # inter-chunk: y_i += exp(cum_i) <c_i, s_prev>
+        y = y + jnp.einsum("bihn,bhpn,bih->bihp", c_, s_prev,
+                           jnp.exp(cum))
+        # state update: s = exp(total) s_prev + sum_j exp(total - cum_j) b_j u_j
+        wj = jnp.exp(total[:, None] - cum)          # (B,Lc,H)
+        s_new = (jnp.exp(total)[:, :, None, None] * s_prev
+                 + jnp.einsum("bjhp,bjhn,bjh->bhpn", u_, b_, wj))
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(chunk_step, s0, (la, uc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, nc * Lc, H, P)[:, :S]
+    return y, s_final
+
+
+def gla_step(s, log_a, u, b, c):
+    """One-token recurrence (decode).  Shapes: log_a (B,H), u (B,H,P),
+    b/c (B,H,N)."""
+    a = jnp.exp(log_a)[..., None, None]
+    s_new = a * s + jnp.einsum("bhp,bhn->bhpn", u, b)
+    y = jnp.einsum("bhn,bhpn->bhp", c, s_new)
+    return s_new, y
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+def mamba2_dims(cfg):
+    din = cfg.d_inner
+    nh = cfg.ssm_heads
+    return din, nh, din // nh, cfg.ssm_state
+
+
+def causal_conv1d(x, w, tail=None):
+    """x: (B,S,C); w: (K,C) depthwise causal conv.  ``tail`` is the carried
+    (B,K-1,C) suffix for decode."""
+    K = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_tail = xp[:, -(K - 1):, :] if K > 1 else xp[:, :0]
+    return jax.nn.silu(out), new_tail
+
+
+def mamba2_block(params, x, cfg, state: SSMState | None = None):
+    """x: (B,S,D) -> (B,S,D).  With ``state`` given, runs incrementally
+    (decode) and returns the new state."""
+    B, S, D = x.shape
+    din, nh, hp, ns = mamba2_dims(cfg)
+    x = hint(x, BATCH, None, None)
+    proj = hint(jnp.einsum("bsd,dz->bsz", x, params["in_proj"]),
+                BATCH, None, MODEL)
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + ns, 2 * din + 2 * ns], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    tail = state.conv if state is not None else None
+    conv_out, new_tail = causal_conv1d(conv_in, params["conv_w"], tail)
+    xin, bmat, cmat = jnp.split(conv_out, [din, din + ns], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])           # (B,S,H)
+    log_a = -jnp.exp(params["a_log"])[None, None] * dt     # (B,S,H) <= 0
+    u = (xin.reshape(B, S, nh, hp)
+         * dt[..., None])                                  # dt-scaled input
+    b = jnp.broadcast_to(bmat[:, :, None, :], (B, S, nh, ns))
+    c = jnp.broadcast_to(cmat[:, :, None, :], (B, S, nh, ns))
+    s0 = (state.s if state is not None
+          else jnp.zeros((B, nh, hp, ns), jnp.float32))
+    if state is not None and S == 1:
+        s_new, y = gla_step(s0, log_a[:, 0], u[:, 0], b[:, 0], c[:, 0])
+        y = y[:, None]
+    else:
+        y, s_new = chunked_gla_scan(log_a, u, b, c, s0)
+    y = y.reshape(B, S, din) + xin * params["d_skip"][None, None]
+    y = y * jax.nn.silu(z)
+    out = hint(jnp.einsum("bsz,zd->bsd", y.astype(x.dtype),
+                          params["out_proj"]), BATCH, None, None)
+    return out, SSMState(s_new, new_tail)
+
+
+# --------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# --------------------------------------------------------------------------
+def mlstm_block(params, x, cfg, state: SSMState | None = None):
+    """mLSTM as gated linear attention with normaliser-augmented values."""
+    B, S, D = x.shape
+    din = cfg.d_inner
+    nh = cfg.ssm_heads
+    hp = din // nh
+    x = hint(x, BATCH, None, None)
+    q = jnp.einsum("bsd,dz->bsz", x, params["wq"]).reshape(B, S, nh, hp)
+    k = jnp.einsum("bsd,dz->bsz", x, params["wk"]).reshape(B, S, nh, hp)
+    v = jnp.einsum("bsd,dz->bsz", x, params["wv"]).reshape(B, S, nh, hp)
+    k = k / (hp ** 0.5)
+    gates = jnp.einsum("bsd,dg->bsg", x, params["w_gates"])  # (B,S,2H)
+    i_t = jnp.exp(jnp.clip(gates[..., :nh], -10.0, 10.0))
+    log_f = jax.nn.log_sigmoid(gates[..., nh:])              # (B,S,H) <= 0
+    # augment v with a ones-column: row P of the state is the normaliser n_t
+    v_aug = jnp.concatenate(
+        [v * i_t[..., None], i_t[..., None] * jnp.ones_like(v[..., :1])],
+        axis=-1)                                             # (B,S,H,P+1)
+    s0 = (state.s if state is not None
+          else jnp.zeros((B, nh, hp + 1, hp), jnp.float32))
+    if state is not None and S == 1:
+        s_new, y = gla_step(s0, log_f[:, 0], v_aug[:, 0], k[:, 0], q[:, 0])
+        y = y[:, None]
+    else:
+        y, s_new = chunked_gla_scan(log_f, v_aug, k, q, s0)
+    num, den = y[..., :hp], y[..., hp:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(B, S, din).astype(x.dtype)
+    return hint(jnp.einsum("bsz,zd->bsd", y, params["wo"]),
+                BATCH, None, None), SSMState(s_new, None)

@@ -1,0 +1,184 @@
+"""train_step / serve_step factories for every assigned architecture.
+
+``make_train_step``: cross-entropy LM loss with microbatched gradient
+accumulation (scan) — the activation-memory knob that keeps the 104B
+train_4k cells inside 16 GB/chip (DESIGN.md §5) — plus AdamW update.
+
+``make_prefill`` / ``make_serve_step``: inference entry points lowered by
+the decode_* / long_* dry-run shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.config import ArchConfig
+from repro.lm.model import (DecodeCache, decode_step, encode, forward,
+                            init_cache)
+from repro.train.optimizer import AdamW, AdamWState
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict, remat: bool = True):
+    """Next-token cross entropy; logits in fp32 for the reduction."""
+    logits = forward(params, cfg, batch["tokens"],
+                     positions3=batch.get("positions3"),
+                     enc_input=batch.get("enc_input"),
+                     extra_embeds=batch.get("extra_embeds"),
+                     remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                            logits.ndim - 1)
+        logits = jnp.where(pad_iota < cfg.vocab, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via a one-hot-masked sum: take_along_axis gathers across
+    # the (vocab -> 'model')-sharded dim and forces GSPMD to replicate the
+    # full logits tensor; the iota-compare fuses into the reduction and
+    # partitions cleanly.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def make_train_step(cfg: ArchConfig, optimizer: AdamW,
+                    microbatches: int = 1, remat: bool = True,
+                    constrain_mb=None, grad_dtype=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With microbatches > 1, the global batch is split along axis 0 and
+    gradients are accumulated through a lax.scan — activations for only one
+    microbatch are ever live.  ``constrain_mb`` (optional) applies a
+    sharding constraint to the split (mb, b/mb, ...) batch so GSPMD keeps
+    the per-microbatch batch dim on the data axis instead of resharding.
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, mb, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            if constrain_mb is not None:
+                mbs = constrain_mb(mbs)
+            gdt = grad_dtype or jnp.float32
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt),
+                                params)
+
+            def acc(carry, mb):
+                l, g = grad_fn(params, mb)
+                return (carry[0] + l,
+                        jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     carry[1], g)), None
+
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zero), mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, gnorm = optimizer.apply(grads, state.opt,
+                                                     params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": optimizer.schedule(state.opt.step)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_init_state(cfg: ArchConfig, optimizer: AdamW, dtype=jnp.float32):
+    def init(key):
+        from repro.lm.model import init_params
+        params = init_params(cfg, key, dtype)
+        return TrainState(params, optimizer.init(params),
+                          jnp.zeros((), jnp.int32))
+    return init
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+def make_prefill(cfg: ArchConfig):
+    """prefill(params, tokens, cache) -> (last-token logits, filled cache).
+
+    Transformer archs fill the KV cache by running ``forward`` with cache
+    writes folded in; recurrent archs run the chunked scan and keep the
+    state.  Implemented as chunk-of-sequence decode for cache-correctness
+    across every family: one call of the underlying block code per chunk.
+    """
+
+    def prefill(params, tokens, cache: DecodeCache,
+                positions3=None, enc_input=None):
+        B, S = tokens.shape
+        if cfg.encoder_decoder and enc_input is not None:
+            memory = encode(params, cfg, enc_input)
+            cache = cache._replace()  # cross K/V precomputed in init_cache
+        # run the whole prompt as one "step" of length S: decode_step
+        # generalises to S>1 because gqa_attention writes S positions and
+        # masks causally inside the cache window.
+        logits, cache = _multi_token_step(params, cfg, tokens, cache,
+                                          positions3)
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def _multi_token_step(params, cfg, tokens, cache, positions3=None):
+    """decode_step for S >= 1 tokens (used by prefill and speculative
+    verification)."""
+    # decode_step is written for S tokens at position cache.pos; reuse it.
+    return decode_step(params, cfg, tokens, cache, positions3=positions3)
+
+
+def make_serve_step(cfg: ArchConfig):
+    """serve_step(params, token, cache) -> (logits, cache): one new token
+    with greedy sampling helper."""
+
+    def serve_step(params, token, cache: DecodeCache, positions3=None):
+        logits, cache = decode_step(params, cfg, token, cache,
+                                    positions3=positions3)
+        next_token = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+        return logits, next_token, cache
+
+    return serve_step
+
+
+def make_generate(cfg: ArchConfig, steps: int):
+    """Greedy autoregressive generation loop (lax.scan over decode steps)."""
+    serve = make_serve_step(cfg)
+
+    def generate(params, prompt_tokens, cache: DecodeCache):
+        prefill = make_prefill(cfg)
+        logits, cache = prefill(params, prompt_tokens, cache)
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+
+        def body(carry, _):
+            tok, cache = carry
+            _, nxt, cache = serve(params, tok, cache)
+            return (nxt, cache), tok[:, 0]
+
+        (_, cache), toks = jax.lax.scan(body, (tok, cache), None,
+                                        length=steps)
+        return toks.T, cache   # (B, steps)
+
+    return generate

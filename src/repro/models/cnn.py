@@ -1,0 +1,178 @@
+"""End-to-end JAX implementations of the paper's CNN workloads.
+
+Every model is driven by its ``LayerGraph`` from ``repro.models.zoo`` — the
+graph IS the single source of truth for layer characteristics, so the JAX
+execution, the dual-OPU scheduler and the latency model can never diverge
+(a test asserts per-layer activation shapes match the graph).
+
+Execution paths per layer:
+  * XLA (default): jax.lax convolutions — this is what the dry-run lowers.
+  * Pallas (use_pallas=True): conv_gemm / depthwise kernels in interpret
+    mode on CPU, the c-core / p-core analogues.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import LayerGraph, LayerSpec
+from repro.kernels.conv_gemm.ops import conv2d_gemm
+from repro.kernels.conv_gemm.ref import conv2d_ref
+from repro.kernels.depthwise.ops import depthwise
+from repro.kernels.depthwise.ref import depthwise_conv2d_ref
+from repro.models.zoo import get_graph
+
+Params = dict[str, dict[str, jax.Array]]
+
+
+def init_params(graph: LayerGraph, key: jax.Array,
+                dtype=jnp.float32) -> Params:
+    """He-init weights for every conv/dwconv/fc layer in the graph."""
+    params: Params = {}
+    for l in graph.layers:
+        key, sub = jax.random.split(key)
+        if l.op == "dwconv":
+            shape = (l.K_h, l.K_w, l.C_i)
+            fan_in = l.K_h * l.K_w
+        else:
+            shape = (l.K_h, l.K_w, l.C_i, l.C_o)
+            fan_in = l.K_h * l.K_w * l.C_i
+        w = jax.random.normal(sub, shape) * (2.0 / fan_in) ** 0.5
+        params[l.name] = {"w": w.astype(dtype),
+                         "b": jnp.zeros((l.C_o,), dtype)}
+    return params
+
+
+def _run_layer(l: LayerSpec, x: jax.Array, p: dict[str, jax.Array],
+               act: str | None, use_pallas: bool) -> jax.Array:
+    if l.op == "dwconv":
+        if use_pallas:
+            return depthwise(x, p["w"], p["b"], stride=l.stride, pad=l.pad,
+                             act=act)
+        return depthwise_conv2d_ref(x, p["w"], p["b"], stride=l.stride,
+                                    pad=l.pad, act=act)
+    if use_pallas:
+        return conv2d_gemm(x, p["w"], p["b"], stride=l.stride, pad=l.pad,
+                           act=act)
+    return conv2d_ref(x, p["w"], p["b"], stride=l.stride, pad=l.pad, act=act)
+
+
+def _avgpool_all(x):
+    return jnp.mean(x, axis=(1, 2), keepdims=True)
+
+
+def _maxpool(x, window=3, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+# --------------------------------------------------------------------------
+# MobileNet v1
+# --------------------------------------------------------------------------
+def mobilenet_v1_forward(params: Params, x: jax.Array,
+                         use_pallas: bool = False,
+                         collect: dict | None = None) -> jax.Array:
+    g = get_graph("mobilenet_v1")
+    h = x
+    for l in g.layers[:-1]:
+        h = _run_layer(l, h, params[l.name], "relu6", use_pallas)
+        if collect is not None:
+            collect[l.name] = h.shape
+    h = _avgpool_all(h)
+    fc = g.layers[-1]
+    h = _run_layer(fc, h, params[fc.name], None, use_pallas)
+    if collect is not None:
+        collect[fc.name] = h.shape
+    return h.reshape(h.shape[0], -1)
+
+
+# --------------------------------------------------------------------------
+# MobileNet v2 (inverted residuals + linear bottlenecks)
+# --------------------------------------------------------------------------
+def mobilenet_v2_forward(params: Params, x: jax.Array,
+                         use_pallas: bool = False,
+                         collect: dict | None = None) -> jax.Array:
+    g = get_graph("mobilenet_v2")
+    h = x
+    residual: jax.Array | None = None
+    for l in g.layers:
+        if l.name == "fc":
+            h = _avgpool_all(h)
+            h = _run_layer(l, h, params[l.name], None, use_pallas)
+            if collect is not None:
+                collect[l.name] = h.shape
+            return h.reshape(h.shape[0], -1)
+        if l.name.endswith("_expand") or l.name in ("conv1", "conv_last"):
+            act = "relu6"
+        elif l.name.endswith("_dw"):
+            act = "relu6"
+        else:                       # _project: linear bottleneck
+            act = None
+        if l.name.endswith("_expand") or (l.name.endswith("_dw")
+                                          and "expand" not in l.name):
+            if l.name.endswith("_expand"):
+                residual = h        # block input (for the residual add)
+        out = _run_layer(l, h, params[l.name], act, use_pallas)
+        if l.name.endswith("_project") and "add" in l.fused \
+                and residual is not None and residual.shape == out.shape:
+            out = out + residual
+        h = out
+        if collect is not None:
+            collect[l.name] = h.shape
+    raise AssertionError("fc layer missing")
+
+
+# --------------------------------------------------------------------------
+# SqueezeNet v1.1
+# --------------------------------------------------------------------------
+def squeezenet_forward(params: Params, x: jax.Array,
+                       use_pallas: bool = False,
+                       collect: dict | None = None) -> jax.Array:
+    g = get_graph("squeezenet")
+    l = g.layer("conv1")
+    h = _run_layer(l, x, params["conv1"], "relu", use_pallas)
+    if collect is not None:
+        collect["conv1"] = h.shape
+    h = _maxpool(jnp.pad(h, ((0, 0), (0, 1), (0, 1), (0, 0)),
+                         constant_values=-jnp.inf))
+    pool_after = {"fire3_e3x3", "fire5_e3x3"}   # v1.1 pool placement
+    for i in range(2, 10):
+        name = f"fire{i}"
+        sq = _run_layer(g.layer(f"{name}_squeeze"), h,
+                        params[f"{name}_squeeze"], "relu", use_pallas)
+        e1 = _run_layer(g.layer(f"{name}_e1x1"), sq,
+                        params[f"{name}_e1x1"], "relu", use_pallas)
+        e3 = _run_layer(g.layer(f"{name}_e3x3"), sq,
+                        params[f"{name}_e3x3"], "relu", use_pallas)
+        h = jnp.concatenate([e1, e3], axis=-1)
+        if collect is not None:
+            collect[f"{name}_squeeze"] = sq.shape
+            collect[f"{name}_e1x1"] = e1.shape
+            collect[f"{name}_e3x3"] = e3.shape
+        if f"{name}_e3x3" in pool_after:
+            h = _maxpool(jnp.pad(h, ((0, 0), (0, 1), (0, 1), (0, 0)),
+                                 constant_values=-jnp.inf))
+    h = _run_layer(g.layer("conv10"), h, params["conv10"], "relu",
+                   use_pallas)
+    if collect is not None:
+        collect["conv10"] = h.shape
+    return _avgpool_all(h).reshape(h.shape[0], -1)
+
+
+FORWARDS: dict[str, Callable] = {
+    "mobilenet_v1": mobilenet_v1_forward,
+    "mobilenet_v2": mobilenet_v2_forward,
+    "squeezenet": squeezenet_forward,
+}
+
+
+def build_model(name: str, key=None, dtype=jnp.float32):
+    """Return (params, forward_fn, graph) for one of the paper workloads."""
+    g = get_graph(name)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = init_params(g, key, dtype)
+    return params, FORWARDS[name], g

@@ -1,0 +1,96 @@
+"""Optimizers in pure JAX (no optax dependency): AdamW + SGD-momentum,
+with global-norm clipping and a warmup-cosine schedule."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def schedule(self, step) -> jax.Array:
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        t = jnp.clip((step - self.warmup_steps)
+                     / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+        cos = self.min_lr_ratio + (1 - self.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return self.lr * warm * cos
+
+    def apply(self, grads, state: AdamWState, params):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(
+            jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state.v, grads)
+        lr = self.schedule(state.step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v), gnorm
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    mom: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    lr: float = 0.1
+    momentum: float = 0.9
+
+    def init(self, params) -> SGDMState:
+        return SGDMState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(lambda p: jnp.zeros(p.shape,
+                                                          jnp.float32),
+                                      params))
+
+    def apply(self, grads, state: SGDMState, params):
+        mom = jax.tree.map(lambda m, g: self.momentum * m
+                           + g.astype(jnp.float32), state.mom, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - self.lr * m).astype(
+                p.dtype), params, mom)
+        return new_params, SGDMState(state.step + 1, mom), global_norm(grads)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,146 @@
+"""Fault-tolerant training runner.
+
+Wraps the jitted train_step with the operational machinery a 1000-node job
+needs (DESIGN.md §5):
+  * periodic atomic checkpoints + automatic resume (--resume);
+  * failure recovery: a step that raises (device loss, injected fault) rolls
+    back to the last checkpoint and replays — data is step-indexed, so
+    replays are bit-identical;
+  * straggler mitigation: per-step deadline watchdog; steps that exceed
+    ``straggler_factor`` x the rolling median are logged and counted, and
+    the dualmesh scheduler's Alg.1 rebalancer can be re-run on the live
+    latency profile (hook);
+  * elastic re-mesh: ``remesh()`` re-shards the state onto a new mesh
+    (grown or shrunk data axis) between steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+import jax
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.lm.config import ArchConfig
+from repro.lm.steps import TrainState, make_init_state, make_train_step
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamW
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_steps: int = 200
+    microbatches: int = 1
+    straggler_factor: float = 3.0
+    max_retries: int = 3
+    seed: int = 0
+
+
+class FaultInjector:
+    """Test hook: raise at chosen steps to exercise recovery."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+class TrainRunner:
+    def __init__(self, cfg: ArchConfig, rcfg: RunnerConfig,
+                 optimizer: AdamW | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 data_cfg: DataConfig | None = None):
+        self.cfg = cfg
+        self.rcfg = rcfg
+        self.opt = optimizer or AdamW(total_steps=rcfg.max_steps)
+        self.fault = fault_injector
+        self.data_cfg = data_cfg or DataConfig(
+            vocab=cfg.vocab, seq_len=64, global_batch=8, seed=rcfg.seed)
+        self.data = SyntheticLM(self.data_cfg)
+        self.train_step = jax.jit(
+            make_train_step(cfg, self.opt, rcfg.microbatches))
+        self.step_times: list[float] = []
+        self.stragglers = 0
+        self.recoveries = 0
+        self.metrics_log: list[dict] = []
+
+    # ---- state ------------------------------------------------------------
+    def init_state(self) -> TrainState:
+        return make_init_state(self.cfg, self.opt)(
+            jax.random.PRNGKey(self.rcfg.seed))
+
+    def resume_or_init(self) -> tuple[TrainState, int]:
+        ref = jax.eval_shape(lambda: self.init_state())
+        last = ckpt.latest_step(self.rcfg.ckpt_dir)
+        if last is None:
+            return self.init_state(), 0
+        state = ckpt.restore(self.rcfg.ckpt_dir, ref)
+        return state, last
+
+    # ---- main loop --------------------------------------------------------
+    def run(self, steps: int | None = None) -> dict:
+        import os
+        os.makedirs(self.rcfg.ckpt_dir, exist_ok=True)
+        state, start = self.resume_or_init()
+        if start == 0:
+            ckpt.save(self.rcfg.ckpt_dir, state, 0)
+        target = steps or self.rcfg.max_steps
+        step = start
+        retries = 0
+        while step < target:
+            batch = self.data.batch_at(step)
+            t0 = time.perf_counter()
+            try:
+                if self.fault is not None:
+                    self.fault.maybe_fail(step)
+                state, metrics = self.train_step(state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+            except Exception as e:  # noqa: BLE001 — node failure path
+                self.recoveries += 1
+                retries += 1
+                if retries > self.rcfg.max_retries:
+                    raise
+                state, step = self.resume_or_init()
+                continue
+            retries = 0
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            if len(self.step_times) >= 8:
+                med = statistics.median(self.step_times[-32:])
+                if dt > self.rcfg.straggler_factor * med:
+                    self.stragglers += 1
+            step += 1
+            metrics["step"] = step
+            metrics["step_time_s"] = dt
+            self.metrics_log.append(metrics)
+            if step % self.rcfg.ckpt_every == 0 or step == target:
+                ckpt.save(self.rcfg.ckpt_dir, state, step)
+        return {"final_step": step,
+                "final_loss": self.metrics_log[-1]["loss"]
+                if self.metrics_log else None,
+                "recoveries": self.recoveries,
+                "stragglers": self.stragglers,
+                "metrics": self.metrics_log}
+
+    # ---- elastic ----------------------------------------------------------
+    def remesh(self, state: TrainState, new_mesh, param_specs_fn):
+        """Re-shard the live state onto a new mesh (elastic scale up/down)."""
+        from repro.launch.sharding import param_specs, to_shardings
+        from jax.sharding import PartitionSpec as P
+        specs = param_specs(state.params, new_mesh)
+        shardings = to_shardings(specs, new_mesh)
+        new_params = jax.tree.map(jax.device_put, state.params, shardings)
+        new_m = jax.tree.map(jax.device_put, state.opt.m, shardings)
+        new_v = jax.tree.map(jax.device_put, state.opt.v, shardings)
+        from repro.train.optimizer import AdamWState
+        return TrainState(new_params,
+                          AdamWState(state.opt.step, new_m, new_v),
+                          state.step)

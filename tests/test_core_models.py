@@ -1,0 +1,144 @@
+"""Paper-model anchors: graph stats, area model vs Tables I/III/VI/VIII,
+latency calibration vs Table IV."""
+import math
+
+import pytest
+
+from repro.core import (ALPHA, BoardModel, CoreConfig, DualCoreConfig,
+                        P128_9, DUAL_BASELINE, DUAL_MBV1, DUAL_MBV2,
+                        DUAL_SQZ, DUAL_MULTI, core_area, dual_core_area,
+                        pe_structure_lut_equiv, simulate_single_core,
+                        layer_latency, graph_latency_report)
+from repro.models.zoo import get_graph
+
+TABLE_IV = {  # board-level cycle counts
+    "mobilenet_v1": 755_857,
+    "mobilenet_v2": 637_551,
+    "squeezenet": 447_457,
+}
+
+
+# --------------------------------------------------------------------------
+# Graph construction
+# --------------------------------------------------------------------------
+def test_mobilenet_v1_shape():
+    g = get_graph("mobilenet_v1")
+    assert len(g) == 28                       # conv1 + 13*(dw+pw) + fc
+    # canonical MACs ~569M (1.0x, 224x224)
+    assert 550e6 < g.total_macs < 580e6
+    # ~4.2M weights
+    assert 3.9e6 < g.total_params < 4.5e6
+
+
+def test_mobilenet_v2_shape():
+    g = get_graph("mobilenet_v2")
+    # 1 stem + 17 blocks (2 or 3 convs each) + conv_last + fc = 53
+    assert len(g) == 53
+    assert 290e6 < g.total_macs < 320e6      # ~300M canonical
+
+
+def test_squeezenet_shape():
+    g = get_graph("squeezenet")
+    assert len(g) == 26                       # conv1 + 8 fires * 3 + conv10
+    assert 340e6 < g.total_macs < 400e6      # v1.1 ~360-390M
+    order = [l.name for l in g.topological_order()]
+    assert order.index("fire2_squeeze") < order.index("fire2_e1x1")
+    assert order.index("fire2_e1x1") < order.index("fire2_e3x3")
+
+
+def test_dwconv_requires_equal_channels():
+    from repro.core import LayerSpec
+    with pytest.raises(ValueError):
+        LayerSpec("bad", "dwconv", 8, 8, 16, 32, 3, 3)
+
+
+# --------------------------------------------------------------------------
+# Area model anchors
+# --------------------------------------------------------------------------
+def test_dsp_counts_match_paper_exactly():
+    # Table I / IV / VI / VIII published DSP counts
+    assert P128_9.n_dsp + 1 == 577            # P(128,9) incl. invariant
+    assert DUAL_MBV1.n_dsp == 832             # C(128,12)+P(8,16)
+    assert DUAL_MBV2.n_dsp == 832             # C(160,8)+P(48,8)
+    assert DUAL_SQZ.n_dsp == 840              # C(130,8)+P(64,10)
+
+
+def test_table_iii_equivalent_lut():
+    p = pe_structure_lut_equiv(CoreConfig("p", 64, 9))
+    c = pe_structure_lut_equiv(CoreConfig("c", 128, 8))
+    # paper: P(64,9): LB 39868, mult 40896, adders 17859, total 98623
+    assert abs(p["multipliers"] - 40_896) < 1
+    assert abs(p["line_buffer"] - 39_868) / 39_868 < 0.01
+    assert abs(p["adders"] - 17_859) / 17_859 < 0.01
+    assert abs(p["total"] - 98_623) / 98_623 < 0.01
+    # paper: C(128,8): mult 72704, adders 31749, total 104453
+    assert abs(c["multipliers"] - 72_704) < 1
+    assert abs(c["adders"] - 31_749) / 31_749 < 0.01
+    assert c["line_buffer"] == 0
+    assert abs(c["total"] - 104_453) / 104_453 < 0.01
+    # "similar total equivalent cost indicates similar area"
+    assert abs(p["total"] - c["total"]) / c["total"] < 0.10
+
+
+def test_table_i_resource_model():
+    a = core_area(P128_9, include_invariant=True)
+    # paper's own model: LUT 137,149 / FF 234,046 / DSP 577 / BRAM 237
+    assert a.dsp == 577
+    assert abs(a.lut - 137_149) / 137_149 < 0.03
+    assert abs(a.ff - 234_046) / 234_046 < 0.03
+    assert abs(a.bram18k - 237) / 237 < 0.20   # BRAM banking approximated
+
+
+def test_dual_area_within_budget():
+    from repro.core import ResourceBudget
+    budget = ResourceBudget()
+    for cfg in (DUAL_BASELINE, DUAL_MBV1, DUAL_MBV2, DUAL_SQZ, DUAL_MULTI):
+        a = dual_core_area(cfg)
+        assert budget.fits(a.dsp, a.bram18k, a.lut, a.ff), str(cfg)
+
+
+# --------------------------------------------------------------------------
+# Latency calibration (Table IV)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("model,target", sorted(TABLE_IV.items()))
+def test_table_iv_cycle_counts(model, target):
+    """Cycle-accurate simulator within 3% of the paper's board cycles
+    (the paper's own simulator is within 1% of its board; our constants are
+    calibrated, see EXPERIMENTS.md §Repro)."""
+    g = get_graph(model)
+    sim = simulate_single_core(g, P128_9, BoardModel())
+    assert abs(sim.cycles - target) / target < 0.03
+
+
+def test_analytic_matches_simulator():
+    """Eq.7 analytic total vs instruction-level simulation: < 2%."""
+    b = BoardModel()
+    for model in TABLE_IV:
+        g = get_graph(model)
+        _, analytic, _ = graph_latency_report(g.topological_order(),
+                                              P128_9, b)
+        sim = simulate_single_core(g, P128_9, b).cycles
+        assert abs(analytic - sim) / sim < 0.02
+
+
+def test_fig1_zigzag_dw_vs_conv():
+    """Fig.1: depthwise layers run at much lower PE efficiency than the
+    regular convolutions around them (the paper's motivation)."""
+    b = BoardModel()
+    g = get_graph("mobilenet_v1")
+    rows, _, _ = graph_latency_report(g.topological_order(), P128_9, b)
+    dw = [r.pe_efficiency(P128_9) for r in rows if r.layer.startswith("dw")]
+    pw = [r.pe_efficiency(P128_9) for r in rows if r.layer.startswith("pw")]
+    assert sum(dw) / len(dw) < 0.5 * (sum(pw) / len(pw))
+
+
+def test_model_average_efficiency_band():
+    """Fig.1 model averages: 59% / 41% / 62% on P(128,9).  Our calibrated
+    model lands in-band for the weighted average (+-20pp tolerance: the
+    paper's is an unweighted layer mean from unpublished traces)."""
+    b = BoardModel()
+    paper = {"mobilenet_v1": 0.59, "mobilenet_v2": 0.41, "squeezenet": 0.62}
+    for m, eff_p in paper.items():
+        g = get_graph(m)
+        _, _, eff = graph_latency_report(g.topological_order(), P128_9, b)
+        assert abs(eff - eff_p) < 0.20, (m, eff, eff_p)

@@ -1,0 +1,113 @@
+"""Tile-sizing invariants (Eq.2-4) + ISA/simulator units."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BoardModel, CoreConfig, LayerSpec, P128_9,
+                        compute_cycles, layer_latency, load_cycles,
+                        tile_layer)
+from repro.core.isa import compile_layer
+from repro.core.simulator import run_stream
+
+B = BoardModel()
+
+
+def layers_strategy():
+    return st.builds(
+        lambda h, ci, co, k, s, dw: LayerSpec(
+            "l", "dwconv" if dw else "conv", h, h,
+            ci if not dw else ci, ci if dw else co,
+            k, k, s, pad=k // 2),
+        st.sampled_from([7, 14, 28, 56, 112, 224]),
+        st.sampled_from([3, 16, 32, 64, 128, 256, 512, 1024]),
+        st.sampled_from([16, 32, 64, 128, 256, 512, 1000, 1024]),
+        st.sampled_from([1, 3, 5]),
+        st.sampled_from([1, 2]),
+        st.booleans())
+
+
+def cores_strategy():
+    return st.builds(
+        lambda kind, n, v: CoreConfig(kind, n, v),
+        st.sampled_from(["c", "p"]),
+        st.sampled_from([8, 32, 64, 128, 180]),
+        st.sampled_from([8, 9, 10, 12, 16]))
+
+
+@settings(max_examples=80, deadline=None)
+@given(layers_strategy(), cores_strategy())
+def test_tiling_invariants(layer, core):
+    """Eq.2: the live multiplier count never exceeds the array; tiles never
+    exceed the layer dims; c-core never uses a window tile."""
+    t = tile_layer(layer, core)
+    assert 1 <= t.T_kh <= layer.K_h and 1 <= t.T_kw <= layer.K_w
+    assert 1 <= t.T_ci <= max(layer.C_i, 1)
+    assert 1 <= t.T_co <= max(layer.C_o, core.n)
+    if not core.has_line_buffer and not t.fold:
+        assert t.T_kh == t.T_kw == 1
+    assert t.utilization(core) <= 1.0 + 1e-9
+    # Eq.4: spatial block fits the buffer
+    assert t.T_h * t.T_w <= core.buffer_depth
+
+
+@settings(max_examples=60, deadline=None)
+@given(layers_strategy(), cores_strategy())
+def test_compute_cycles_lower_bounded_by_macs(layer, core):
+    """No tiling may beat the MAC-rate bound (Eq.11 is a true bound)."""
+    cycles, _ = compute_cycles(layer, core, B)
+    assert cycles * core.n_mult >= layer.macs * 0.999
+
+
+@settings(max_examples=40, deadline=None)
+@given(layers_strategy(), cores_strategy())
+def test_load_cycles_model(layer, core):
+    assert load_cycles(layer, B) >= layer.load_elems // B.bw_dram
+
+
+def test_dwconv_prefers_pcore():
+    """The paper's motivation: depthwise conv runs far better on the
+    line-buffered p-core than on the c-core at equal area."""
+    dw = LayerSpec("dw", "dwconv", 14, 14, 512, 512, 3, 3, 1, pad=1)
+    c = layer_latency(dw, CoreConfig("c", 128, 9), B)
+    p = layer_latency(dw, CoreConfig("p", 128, 9), B)
+    assert p.t_compute * 3 < c.t_compute
+
+
+def test_pointwise_prefers_ccore_at_equal_area():
+    pw = LayerSpec("pw", "conv", 14, 14, 512, 512, 1, 1, 1)
+    c = layer_latency(pw, CoreConfig("c", 128, 8), B)
+    p = layer_latency(pw, CoreConfig("p", 64, 9), B)   # ~same equiv area
+    assert c.t_compute < p.t_compute
+
+
+# --------------------------------------------------------------------------
+# ISA + simulator
+# --------------------------------------------------------------------------
+def test_compile_layer_structure():
+    l = LayerSpec("x", "conv", 56, 56, 64, 128, 3, 3, 1, pad=1)
+    instrs = compile_layer(l, P128_9, B)
+    ops = [i.op for i in instrs]
+    assert ops[0] == "LOAD" and ops[-1] == "STORE"
+    assert ops.count("LOAD") == ops.count("COMPUTE")
+    # blocked loads alternate ping/pong banks
+    banks = [i.bank for i in instrs if i.op == "LOAD"]
+    assert all(b in (0, 1) for b in banks)
+
+
+def test_simulator_matches_analytic_per_layer():
+    l = LayerSpec("x", "conv", 56, 56, 64, 128, 3, 3, 1, pad=1)
+    instrs = compile_layer(l, P128_9, B)
+    tr = run_stream(instrs, B)
+    analytic = layer_latency(l, P128_9, B).t_layer
+    assert abs(tr.cycles - analytic) <= 0.05 * analytic + B.l_dram \
+        + 2 * B.l_post
+
+
+def test_simulator_overlaps_load_and_compute():
+    """Ping-pong banks must overlap: total < sum of busy times when both
+    engines have work."""
+    l = LayerSpec("x", "conv", 112, 112, 64, 64, 3, 3, 1, pad=1)
+    instrs = compile_layer(l, P128_9, B)
+    tr = run_stream(instrs, B)
+    assert tr.cycles < tr.busy_cycles["load"] + tr.busy_cycles["compute"]

@@ -1,0 +1,159 @@
+"""dualmesh: the paper's design flow on TPU submeshes (DESIGN.md §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_arch, get_smoke
+from repro.dualmesh import (ALLOCATIONS, DualMeshRunner, Stage, TpuModel,
+                            best_schedule, build, decode_cost, load_balance,
+                            prefill_cost, request_stages, search, split_mesh,
+                            theta_candidates)
+from repro.dualmesh.partition import abstract_split
+from repro.dualmesh.schedule import stage_cost
+
+CFG = get_arch("qwen2_5_14b")
+HW = TpuModel()
+
+
+# --------------------------------------------------------------------------
+# Cost model properties
+# --------------------------------------------------------------------------
+def test_prefill_is_compute_bound_decode_is_memory_bound():
+    """The paper's motivating heterogeneity, reproduced on the LM side:
+    prefill (regular-conv analogue) is compute-bound; decode (depthwise
+    analogue) is memory/floor-bound."""
+    p = prefill_cost(CFG, batch=8, seq=8192, chips=64, hw=HW, tp=8)
+    d = decode_cost(CFG, batch=8, kv_len=8192, chips=64, steps=256,
+                    hw=HW, tp=8)
+    assert p.bound == "compute"
+    assert d.bound in ("memory", "collective")
+    # arithmetic-intensity gap: decode latency is dominated by bytes
+    assert d.t_memory / max(d.t_compute, 1e-12) > 3
+
+
+def test_decode_scaling_saturates():
+    """Adding chips to decode hits the per-step floor (the PE-efficiency
+    analogue) — the reason a dedicated small p-submesh wins."""
+    d64 = decode_cost(CFG, 8, 8192, 64, steps=256, hw=HW, tp=8).latency
+    d256 = decode_cost(CFG, 8, 8192, 256, steps=256, hw=HW, tp=8).latency
+    assert d256 > d64 / 4 * 1.5          # far from linear scaling
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.sampled_from([512, 4096, 32768]),
+       st.integers(8, 256))
+def test_costs_positive_monotone(batch, seq, chips):
+    p = prefill_cost(CFG, batch, seq, chips, hw=HW)
+    assert p.latency > 0
+    p2 = prefill_cost(CFG, batch, 2 * seq, chips, hw=HW)
+    assert p2.latency > p.latency        # more tokens, more time
+
+
+# --------------------------------------------------------------------------
+# Partitioning
+# --------------------------------------------------------------------------
+def test_abstract_split_counts():
+    d = abstract_split(256, 0.75, tp_c=16, tp_p=4)
+    assert d.c_chips + d.p_chips == 256
+    assert abs(d.theta - 0.75) < 0.05
+    assert d.c_mesh.shape["model"] <= 16
+
+
+def test_split_mesh_single_device_degenerate():
+    d = split_mesh(jax.devices(), 0.5)
+    assert d.c_chips >= 1 and d.p_chips >= 1
+
+
+# --------------------------------------------------------------------------
+# Scheduling (paper §V re-targeted)
+# --------------------------------------------------------------------------
+def _stages():
+    return request_stages(CFG, [(8, 4096, 64), (8, 4096, 64)])
+
+
+def test_schedule_covers_all_stages():
+    dual = abstract_split(256, 0.5)
+    for scheme in ALLOCATIONS:
+        s = build(_stages(), CFG, dual, HW, scheme)
+        n = sum(len(g.stages) for g in s.groups)
+        assert n == len(_stages())
+        assert all(a.mesh != b.mesh
+                   for a, b in zip(s.groups, s.groups[1:]))
+
+
+def test_load_balance_never_worse():
+    dual = abstract_split(256, 0.5)
+    s = build(_stages(), CFG, dual, HW, "stage_type")
+    lb = load_balance(s)
+    assert lb.makespan() <= s.makespan() + 1e-12
+    # token conservation through splits
+    def toks(sched):
+        return sum(st.seq if st.kind == "prefill" else 0
+                   for g in sched.groups for st in g.stages)
+    assert toks(lb) == toks(s)
+
+
+def test_best_schedule_beats_single_allocation():
+    dual = abstract_split(256, 0.5)
+    best = best_schedule(_stages(), CFG, dual, HW)
+    worst = max(build(_stages(), CFG, dual, HW, sch).makespan()
+                for sch in ALLOCATIONS)
+    assert best.makespan() <= worst
+
+
+# --------------------------------------------------------------------------
+# Design-flow search (paper §V-B re-targeted)
+# --------------------------------------------------------------------------
+def test_search_finds_dual_win_on_balanced_workload():
+    stages = request_stages(CFG, [(8, 8192, 256)] * 4)
+    res = search(stages, CFG, n_devices=256, max_evals=10)
+    single = sum(stage_cost(s, CFG, 256, 16, HW) for s in stages) * 2
+    assert res.makespan < single          # dual-OPU claim, LM domain
+    assert 0.05 <= res.theta <= 0.95
+
+
+def test_search_theta_tracks_workload_mix():
+    """More decode-heavy workload -> larger share for the decode submesh
+    (the Table VI 'heterogeneity drives theta' result, LM domain)."""
+    bal = search(request_stages(CFG, [(8, 8192, 64)] * 4), CFG,
+                 n_devices=256, max_evals=10)
+    dec = search(request_stages(CFG, [(8, 1024, 1024)] * 4), CFG,
+                 n_devices=256, max_evals=10)
+    # share of chips of the submesh that runs the decode stages
+    def decode_share(res):
+        sched = res.schedule
+        c_dec = sum(1 for g in sched.groups for s in g.stages
+                    if s.kind == "decode" and g.mesh == "c")
+        p_dec = sum(1 for g in sched.groups for s in g.stages
+                    if s.kind == "decode" and g.mesh == "p")
+        share_c = res.dual.c_chips / (res.dual.c_chips + res.dual.p_chips)
+        return share_c if c_dec >= p_dec else 1 - share_c
+    assert decode_share(dec) >= decode_share(bal) - 0.05
+
+
+def test_search_respects_hbm():
+    res = search(_stages(), CFG, n_devices=256, max_evals=6)
+    w = 2.0 * CFG.param_count() / res.tp_c
+    assert w <= 0.75 * HW.hbm_bytes
+
+
+# --------------------------------------------------------------------------
+# Runtime (degenerate 1-device dual mesh)
+# --------------------------------------------------------------------------
+def test_runtime_two_streams_and_consistency():
+    scfg = get_smoke("qwen2_0_5b")
+    from repro.lm.model import init_params
+    params = init_params(scfg, jax.random.PRNGKey(0))
+    dual = split_mesh(jax.devices(), 0.5)
+    r = DualMeshRunner(scfg, params, dual, max_len=64)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                scfg.vocab)
+    a, b, trace = r.run_two_streams(prompt, prompt, gen_steps=4)
+    assert a.shape == (2, 13) and b.shape == (2, 13)
+    # identical prompts on identical params -> identical generations
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    kinds = [(k, m) for k, m, _ in trace]
+    assert kinds == [("prefill", "c"), ("decode", "p"),
+                     ("prefill", "c"), ("decode", "p")]

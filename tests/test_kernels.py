@@ -1,0 +1,182 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests,
+all against the pure-jnp oracles, in Pallas interpret mode (CPU)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.conv_gemm.kernel import matmul_bias_act
+from repro.kernels.conv_gemm.ops import conv2d_gemm, pointwise_conv
+from repro.kernels.conv_gemm.ref import conv2d_ref, matmul_bias_act_ref
+from repro.kernels.depthwise.ops import depthwise
+from repro.kernels.depthwise.ref import depthwise_conv2d_ref
+from repro.kernels.attention.kernel import flash_attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=3e-4, atol=3e-4)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+KEYS = jax.random.split(jax.random.PRNGKey(42), 8)
+
+
+# --------------------------------------------------------------------------
+# conv_gemm (c-core analogue)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (128, 128, 128),
+                                   (100, 70, 30), (257, 129, 65),
+                                   (1, 512, 1000)])
+def test_matmul_shapes(m, k, n, dtype):
+    x = rand(KEYS[0], (m, k), dtype, 0.3)
+    w = rand(KEYS[1], (k, n), dtype, 0.3)
+    b = rand(KEYS[2], (n,), dtype)
+    out = matmul_bias_act(x, w, b, act="relu")
+    ref = matmul_bias_act_ref(x, w, b, act="relu")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64),
+       st.sampled_from([None, "relu", "relu6"]))
+def test_matmul_property(m, k, n, act):
+    x = rand(KEYS[0], (m, k), jnp.float32, 0.3)
+    w = rand(KEYS[1], (k, n), jnp.float32, 0.3)
+    out = matmul_bias_act(x, w, None, act=act, block=(32, 32, 32))
+    ref = matmul_bias_act_ref(x, w, None, act=act)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,ci,co,k,s,pad", [
+    (14, 32, 64, 3, 1, 1), (28, 16, 24, 3, 2, 1),
+    (8, 8, 16, 1, 1, 0), (224 // 8, 3, 32, 3, 2, 1)])
+def test_conv2d_gemm(h, ci, co, k, s, pad, dtype):
+    x = rand(KEYS[0], (2, h, h, ci), dtype, 0.5)
+    w = rand(KEYS[1], (k, k, ci, co), dtype, 0.2)
+    b = rand(KEYS[2], (co,), dtype)
+    out = conv2d_gemm(x, w, b, stride=s, pad=pad, act="relu6")
+    ref = conv2d_ref(x, w, b, stride=s, pad=pad, act="relu6")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_pointwise_matches_conv():
+    x = rand(KEYS[0], (2, 7, 7, 64), jnp.float32, 0.5)
+    w = rand(KEYS[1], (1, 1, 64, 32), jnp.float32, 0.2)
+    np.testing.assert_allclose(pointwise_conv(x, w),
+                               conv2d_ref(x, w, stride=1, pad=0),
+                               rtol=3e-4, atol=3e-4)
+
+
+# --------------------------------------------------------------------------
+# depthwise (p-core analogue)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,c,s", [(14, 512, 1), (28, 256, 2), (7, 1024, 1),
+                                   (9, 24, 2), (112, 32, 1)])
+def test_depthwise_shapes(h, c, s, dtype):
+    x = rand(KEYS[0], (2, h, h, c), dtype, 0.5)
+    w = rand(KEYS[1], (3, 3, c), dtype, 0.3)
+    b = rand(KEYS[2], (c,), dtype)
+    out = depthwise(x, w, b, stride=s, pad=1, act="relu6")
+    ref = depthwise_conv2d_ref(x, w, b, stride=s, pad=1, act="relu6")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 32), st.sampled_from([8, 16, 56]),
+       st.sampled_from([1, 2]), st.sampled_from([3, 5]))
+def test_depthwise_property(h, c, s, k):
+    x = rand(KEYS[0], (1, h, h, c), jnp.float32, 0.5)
+    w = rand(KEYS[1], (k, k, c), jnp.float32, 0.3)
+    pad = k // 2
+    out = depthwise(x, w, None, stride=s, pad=pad)
+    ref = depthwise_conv2d_ref(x, w, None, stride=s, pad=pad)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d,causal", [
+    (2, 8, 2, 64, 64, 32, True),      # GQA
+    (1, 4, 4, 128, 128, 64, True),    # MHA
+    (2, 6, 1, 1, 256, 64, False),     # MQA decode shape
+    (1, 14, 2, 37, 37, 64, True),     # qwen2-0.5b heads (non-pow2)
+    (1, 2, 2, 8, 200, 128, False),    # cross-attn shape (sq != sk)
+])
+def test_flash_attention(b, hq, hkv, sq, sk, d, causal, dtype):
+    q = rand(KEYS[0], (b, hq, sq, d), dtype, 0.5)
+    k = rand(KEYS[1], (b, hkv, sk, d), dtype, 0.5)
+    v = rand(KEYS[2], (b, hkv, sk, d), dtype, 0.5)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               **(dict(rtol=3e-2, atol=3e-2)
+                                  if dtype == jnp.bfloat16
+                                  else dict(rtol=2e-4, atol=2e-4)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([(4, 2), (8, 1), (6, 6)]),
+       st.integers(1, 80), st.sampled_from([32, 64]))
+def test_flash_attention_property(b, heads, sq, d):
+    hq, hkv = heads
+    q = rand(KEYS[0], (b, hq, sq, d), jnp.float32, 0.5)
+    k = rand(KEYS[1], (b, hkv, sq, d), jnp.float32, 0.5)
+    v = rand(KEYS[2], (b, hkv, sq, d), jnp.float32, 0.5)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_softmax_rows_sum():
+    """Property: attention output of constant-V equals that constant."""
+    b, hq, hkv, s, d = 1, 4, 2, 64, 32
+    q = rand(KEYS[0], (b, hq, s, d), jnp.float32)
+    k = rand(KEYS[1], (b, hkv, s, d), jnp.float32)
+    v = jnp.ones((b, hkv, s, d), jnp.float32) * 3.5
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(out, jnp.full_like(out, 3.5), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 256), (2, 16, 896), (1, 1, 12288),
+                                   (3, 7, 1024)])
+def test_rmsnorm(shape, dtype):
+    x = rand(KEYS[0], shape, dtype, 2.0)
+    w = rand(KEYS[1], shape[-1:], dtype)
+    out = rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 100), st.sampled_from([64, 896, 1536]))
+def test_rmsnorm_property(rows, d):
+    x = rand(KEYS[0], (rows, d), jnp.float32, 2.0)
+    w = jnp.ones((d,), jnp.float32)
+    out = rmsnorm(x, w)
+    # unit weight: per-row RMS of output ~= 1
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, np.ones_like(rms), rtol=1e-3)

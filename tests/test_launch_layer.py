@@ -1,0 +1,189 @@
+"""Launch-layer units: sharding rules, sanitize fallbacks, policies,
+HLO analysis (trip attribution / dot flops / collectives), roofline model.
+
+These run on the 1-device CPU test process: meshes here are 1x1 (sanitize
+drops everything not divisible by 1 — exercised via explicit fake-mesh
+shims below), and the HLO parser is tested on synthetic HLO text.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import HloIndex, analyze_hlo
+from repro.launch.roofline_model import hbm_bytes_per_device
+from repro.launch.sharding import (ShardingPolicy, _apply_policy,
+                                   _param_rule, auto_policy, sanitize,
+                                   zero1_specs)
+from repro.configs.registry import get_arch
+
+
+class FakeMesh:
+    """Duck-typed mesh: sanitize/_axsize only touch shape/axis_names."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+# --------------------------------------------------------------------------
+# sanitize
+# --------------------------------------------------------------------------
+def test_sanitize_keeps_divisible():
+    assert sanitize((256, 4096), P("data", None), MESH) == P("data", None)
+    assert sanitize((12288, 12288), P("data", "model"), MESH) \
+        == P("data", "model")
+
+
+def test_sanitize_drops_nondivisible():
+    fb = []
+    # 14 heads on a 16-way axis (qwen2-0.5b case)
+    assert sanitize((14, 64), P("model", None), MESH, fb) == P(None, None)
+    assert fb
+
+
+def test_sanitize_tuple_degrades_to_member():
+    fb = []
+    # 29568 % 256 != 0 but % 16 == 0 (qwen2-vl d_ff under feature_2d)
+    out = sanitize((29568,), P(("data", "model")), MESH, fb)
+    assert out in (P("data"), P("model"))
+    assert fb
+
+
+def test_sanitize_missing_axis():
+    m = FakeMesh(data=16)   # no 'model'
+    assert sanitize((64,), P("model"), m) == P(None)
+
+
+# --------------------------------------------------------------------------
+# param rules + policies
+# --------------------------------------------------------------------------
+def test_param_rules_canonical():
+    assert _param_rule("blocks/attn/wq", 3) == P(None, "data", "model")
+    assert _param_rule("blocks/attn/wo", 3) == P(None, "model", "data")
+    assert _param_rule("blocks/mlp/wd", 3) == P(None, "model", "data")
+    assert _param_rule("embed", 2) == P(None, "model")
+    assert _param_rule("lm_head", 2) == P("data", "model")
+    assert _param_rule("blocks/ln1", 2) == P()
+
+
+def test_policy_no_fsdp_drops_data():
+    spec = _apply_policy(P(None, "data", "model"),
+                         ShardingPolicy(fsdp=False))
+    assert spec == P(None, None, "model")
+
+
+def test_policy_dp_only_replicates():
+    spec = _apply_policy(P(None, "data", "model"),
+                         ShardingPolicy(dp_only=True))
+    assert spec == P(None, None, None)
+
+
+def test_policy_feature_2d():
+    spec = _apply_policy(P(None, "data", "model"),
+                         ShardingPolicy(feature_2d=True))
+    assert spec == P(None, "data", ("data", "model"))
+
+
+def test_auto_policy_thresholds():
+    # 0.5B trains without FSDP; 104B needs it
+    assert auto_policy(int(0.5e9), "train").fsdp is False
+    assert auto_policy(int(104e9), "train").fsdp is True
+    # serving a 72B wants 2D features; a 0.5B does not
+    assert auto_policy(int(72e9), "decode").feature_2d is True
+    assert auto_policy(int(0.5e9), "decode").feature_2d is False
+
+
+def test_zero1_specs_shard_largest_dim():
+    mesh = FakeMesh(data=16, model=16)
+    tree = {"w": jax.ShapeDtypeStruct((24, 896, 1152), jnp.float32),
+            "b": jax.ShapeDtypeStruct((7,), jnp.float32)}
+    specs = zero1_specs(tree, mesh)
+    assert "model" in tuple(specs["w"])
+    assert specs["b"] == P()
+
+
+# --------------------------------------------------------------------------
+# HLO analysis
+# --------------------------------------------------------------------------
+SYNTH_HLO = """
+HloModule test
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %w1 = (s32[], f32[8,16]) while(%t), condition=%cond, body=%body, metadata={op_name="jit(f)/while"}, backend_config={"known_trip_count":{"n":"24"}}
+}
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %a = f32[8,32]{1,0} parameter(0)
+  %b = f32[32,16]{1,0} parameter(1)
+  %dot.1 = f32[8,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(f)/while/body/dot_general"}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, metadata={op_name="jit(f)/while/body/ar"}
+}
+"""
+
+
+def test_hlo_dot_flops_and_trip_attribution():
+    s = analyze_hlo(SYNTH_HLO)
+    # dot: 2*8*16*32 = 8192 flops, x24 trips
+    assert s["flops_per_device"] == pytest.approx(8192 * 24)
+    # all-reduce: 8*16*4 bytes x24
+    assert s["collective_bytes_per_device"] == pytest.approx(512 * 24)
+    assert s["collective_counts"]["all-reduce"] == 24
+
+
+def test_hlo_duplicate_while_opnames_deduped():
+    dup = SYNTH_HLO + SYNTH_HLO.replace("%w1", "%w2").replace(
+        "ENTRY ", "")
+    idx = HloIndex(dup)
+    # two while instructions, one op_name -> one multiplier entry
+    assert idx.multiplier("jit(f)/while/body/dot_general") == 24
+
+
+def test_hlo_nested_whiles_multiply():
+    nested = SYNTH_HLO.replace(
+        'op_name="jit(f)/while/body/dot_general"',
+        'op_name="jit(f)/while/body/inner/while/body/dot_general"')
+    nested = nested.replace(
+        '%ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, '
+        'metadata={op_name="jit(f)/while/body/ar"}',
+        '%w3 = (s32[]) while(%q), condition=%c2, body=%b2, '
+        'metadata={op_name="jit(f)/while/body/inner/while"}, '
+        'backend_config={"known_trip_count":{"n":"4"}}')
+    s = analyze_hlo(nested)
+    assert s["flops_per_device"] == pytest.approx(8192 * 24 * 4)
+
+
+def test_hlo_ignores_non_loop_ops():
+    flat = """%dot.9 = bf16[4,4]{1,0} dot(%x, %y), lhs_contracting_dims={1}
+%x = bf16[4,8]{1,0} parameter(0)
+"""
+    s = analyze_hlo(flat)
+    assert s["flops_per_device"] == pytest.approx(2 * 4 * 4 * 8)
+
+
+# --------------------------------------------------------------------------
+# roofline memory model
+# --------------------------------------------------------------------------
+def test_roofline_memory_decode_dominated_by_kv():
+    cfg = get_arch("command_r_plus_104b")
+    dec = hbm_bytes_per_device(cfg, "decode", 32768, 128, 256)
+    w_only = 2.0 * cfg.param_count() / 256
+    assert dec > 3 * w_only        # KV read >> weight read at 32k x 128
+
+
+def test_roofline_memory_train_scales_with_microbatches():
+    cfg = get_arch("qwen2_5_14b")
+    a = hbm_bytes_per_device(cfg, "train", 4096, 256, 256, microbatches=4)
+    b = hbm_bytes_per_device(cfg, "train", 4096, 256, 256, microbatches=8)
+    assert b > a                   # more weight streams
+
+
+def test_roofline_memory_ssm_state():
+    cfg = get_arch("xlstm_350m")
+    d = hbm_bytes_per_device(cfg, "long-decode", 524288, 1, 256)
+    assert d > 0
+    # recurrent state is O(1) in seq: same bytes for 32k and 500k
+    d2 = hbm_bytes_per_device(cfg, "decode", 32768, 1, 256)
+    assert d == pytest.approx(d2)

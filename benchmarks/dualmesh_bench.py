@@ -1,15 +1,20 @@
 """Dual-mesh serving benchmark: the paper's Table V/VI experiments
-re-staged on the LM side (DESIGN.md §2).
+re-staged on the LM side (DESIGN.md §2), plus N-stream scaling.
 
 For each workload mix and architecture: single-pod serialized baseline vs
 the dual-mesh interleaved schedule found by the §V-B search, plus the
 scheduling-scheme comparison (stage-type / greedy / round-robin /
-load-balance) — the LM twin of Table V."""
+load-balance) — the LM twin of Table V.  ``bench_stream_scaling`` sweeps
+the continuous-batching stream count N in {2, 4, 8, 16}: model-side
+throughput from the N-stream flow-shop makespan on a 256-chip split, and
+measured tokens/s from the real runtime on the local (degenerate CPU)
+dual mesh."""
 from __future__ import annotations
 
-from repro.configs.registry import get_arch
+from repro.configs.registry import get_arch, get_smoke
 from repro.dualmesh import (ALLOCATIONS, TpuModel, best_schedule, build,
-                            load_balance, request_stages, search)
+                            load_balance, plan_admission, request_stages,
+                            search)
 from repro.dualmesh.partition import abstract_split
 from repro.dualmesh.schedule import stage_cost
 
@@ -26,10 +31,13 @@ WORKLOADS = {
 # kept out of the headline table, see search() fallback note.)
 ARCHS = ("qwen2_5_14b", "qwen2_moe_a2_7b", "zamba2_2_7b")
 
+STREAM_COUNTS = (2, 4, 8, 16)
 
-def single_mesh_baseline(stages, cfg, chips=256, tp=16):
-    """Both streams serialized on the full pod (homogeneous baseline)."""
-    return sum(stage_cost(s, cfg, chips, tp, HW) for s in stages) * 2
+
+def single_mesh_baseline(stages, cfg, chips=256, tp=16, n_streams=2):
+    """All streams serialized on the full pod (homogeneous baseline)."""
+    return sum(stage_cost(s, cfg, chips, tp, HW)
+               for s in stages) * n_streams
 
 
 def bench_scheduling_schemes(arch="qwen2_5_14b"):
@@ -74,6 +82,72 @@ def bench_dual_vs_single():
     return rows
 
 
-def run_all():
+def bench_stream_scaling_model(arch="qwen2_5_14b",
+                               workload=(8, 8192, 256)):
+    """Model-side N-stream throughput: the flow-shop makespan amortizes
+    the stagger fill/drain over more streams, and the makespan-aware
+    admission plan picks the decode fusion width."""
+    print(f"\n## N-stream scaling, model-side ({arch}, 256 chips, "
+          f"per-stream batch={workload[0]} prompt={workload[1]} "
+          f"gen={workload[2]})")
+    cfg = get_arch(arch)
+    dual = abstract_split(256, 0.5)
+    stages = request_stages(cfg, [workload])
+    rows = []
+    for n in STREAM_COUNTS:
+        sched = best_schedule(stages, cfg, dual, HW, n_streams=n)
+        adm = plan_admission(cfg, dual, HW, *workload, n)
+        rows.append((n, sched.makespan(), sched.throughput_tokens_per_s(),
+                     adm.group_size))
+        print(f"N={n:<3} makespan={sched.makespan()*1e3:9.1f} ms "
+              f"tokens/s={sched.throughput_tokens_per_s():12.0f} "
+              f"admission group_size={adm.group_size}")
+    return rows
+
+
+def bench_stream_scaling_runtime(arch="qwen2_0_5b", batch=1,
+                                 prompt_len=16, gen=16):
+    """Measured N-stream throughput on the local (degenerate CPU) dual
+    mesh: fused decode batches amortize per-step dispatch, so tokens/s
+    grows with N even without real disjoint submeshes."""
+    import jax
+    from repro.dualmesh import DualMeshRunner, split_mesh
+    from repro.lm.model import init_params
+
+    print(f"\n## N-stream scaling, measured on {len(jax.devices())} "
+          f"local device(s) ({arch} smoke, per-stream batch={batch} "
+          f"prompt={prompt_len} gen={gen})")
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dual = split_mesh(jax.devices(), 0.5)
+    rows = {}
+    for n in STREAM_COUNTS:
+        runner = DualMeshRunner(cfg, params, dual,
+                                max_len=prompt_len + gen + 8)
+        prompts = [jax.random.randint(k, (batch, prompt_len), 0, cfg.vocab)
+                   for k in jax.random.split(jax.random.PRNGKey(1), n)]
+        runner.serve(prompts, gen_steps=gen)          # warm the jit caches
+        runner.trace.clear()
+        res = runner.serve(prompts, gen_steps=gen)
+        s = res.stats
+        rows[n] = s["tokens_per_s"]
+        print(f"N={n:<3} {s['wall_s']*1e3:8.1f} ms "
+              f"tokens/s={s['tokens_per_s']:9.0f} "
+              f"(group_size={s['group_size']}, "
+              f"fused={s['fused_sizes']})")
+    gain = rows[8] / rows[2] if rows.get(2) else float("nan")
+    print(f"N=8 vs N=2 measured throughput: {gain:.2f}x "
+          f"({'>=' if rows[8] >= rows[2] else '<'} baseline)")
+    return rows
+
+
+def run_all(with_runtime: bool = True):
     bench_scheduling_schemes()
     bench_dual_vs_single()
+    bench_stream_scaling_model()
+    if with_runtime:
+        bench_stream_scaling_runtime()
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,41 +1,54 @@
-"""Serve a small LM with batched requests on the dual-mesh runtime —
-the paper's interleaved two-stream schedule on real devices
-(deliverable b, serving flavour).
+"""Serve a small LM on the dual-mesh continuous-batching runtime — the
+paper's interleaved schedule generalized to an N-stream request queue on
+real devices (deliverable b, serving flavour).
 
     PYTHONPATH=src python examples/serve_dualmesh.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_smoke
-from repro.dualmesh import DualMeshRunner, request_stages, search, \
-    split_mesh
+from repro.dualmesh import (DualMeshRunner, TpuModel, plan_admission,
+                            request_stages, search, split_mesh)
 from repro.lm.model import init_params
+
+N_STREAMS = 4
+BATCH, PROMPT, GEN = 4, 64, 32
 
 
 def main():
     cfg = get_smoke("qwen2_5_14b")
-    # 1. design flow: pick theta / TP for the workload on a 256-chip pod
-    stages = request_stages(cfg, [(4, 64, 32)] * 2)
-    plan = search(stages, cfg, n_devices=256, max_evals=8)
+    # 1. design flow: pick theta / TP for the N-stream workload on a
+    #    256-chip pod
+    stages = request_stages(cfg, [(BATCH, PROMPT, GEN)])
+    plan = search(stages, cfg, n_devices=256, max_evals=8,
+                  n_streams=N_STREAMS)
     print(f"plan: theta={plan.theta:.2f} tp=({plan.tp_c},{plan.tp_p}) "
-          f"makespan={plan.makespan*1e3:.1f} ms on 256 chips")
+          f"{N_STREAMS}-stream makespan={plan.makespan*1e3:.1f} ms "
+          f"on 256 chips")
 
-    # 2. execute the interleaved schedule on the local devices
+    # 2. makespan-aware admission: how many prefilled streams to fuse
+    #    per decode batch
+    dual = split_mesh(jax.devices(), plan.theta)
+    adm = plan_admission(cfg, dual, TpuModel(), BATCH, PROMPT, GEN,
+                         N_STREAMS)
+    print(f"admission: fuse decode groups of {adm.group_size} "
+          f"(est {adm.est_tokens_per_s:.0f} tok/s model-side)")
+
+    # 3. execute the request queue on the local devices
     params = init_params(cfg, jax.random.PRNGKey(0))
-    runner = DualMeshRunner(cfg, params, split_mesh(jax.devices(),
-                                                    plan.theta),
-                            max_len=128)
-    key = jax.random.PRNGKey(1)
-    pa = jax.random.randint(key, (4, 64), 0, cfg.vocab)
-    pb = jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, cfg.vocab)
+    runner = DualMeshRunner(cfg, params, dual, max_len=PROMPT + GEN + 8)
+    prompts = [jax.random.randint(k, (BATCH, PROMPT), 0, cfg.vocab)
+               for k in jax.random.split(jax.random.PRNGKey(1), N_STREAMS)]
     t0 = time.perf_counter()
-    a, b, trace = runner.run_two_streams(pa, pb, gen_steps=32)
+    res = runner.serve(prompts, gen_steps=GEN, group_size=adm.group_size)
     dt = time.perf_counter() - t0
-    print(f"generated: A {a.shape}, B {b.shape} in {dt*1e3:.0f} ms")
-    for kind, mesh_name, t in trace:
+    shapes = [tuple(o.shape) for o in res.outputs]
+    print(f"generated {shapes} in {dt*1e3:.0f} ms "
+          f"({res.stats['tokens_per_s']:.0f} tok/s, fused decode batches "
+          f"{res.stats['fused_sizes']})")
+    for kind, mesh_name, t in res.trace:
         print(f"  {kind:<8} on {mesh_name}-mesh  {t*1e3:7.1f} ms")
 
 

@@ -3,21 +3,25 @@ first-class TPU serving feature (DESIGN.md §2).
 
   partition  - theta split of a chip pool into c-/p-submeshes (Eq.10)
   cost       - 3-term roofline stage model (Eq.5-7 port)
-  schedule   - interleaved two-stream scheduling + Alg.1 load balance
+  schedule   - N-stream staggered scheduling + Alg.1 load balance +
+               makespan-aware admission planning (N=2 = the paper's case)
   search     - branch-and-bound theta + (tp_c, tp_p) local search (§V-B)
-  runtime    - real dual-submesh execution (async jit on disjoint devices)
+  runtime    - continuous-batching dual-submesh execution (chunked prefill
+               on c, fused decode groups on p; async jit overlap)
 """
 from repro.dualmesh.cost import StageCost, TpuModel, decode_cost, \
     prefill_cost
 from repro.dualmesh.partition import DualMesh, split_mesh, theta_candidates
-from repro.dualmesh.schedule import (ALLOCATIONS, DualSchedule, Stage,
-                                     best_schedule, build, load_balance,
-                                     request_stages)
+from repro.dualmesh.schedule import (ALLOCATIONS, AdmissionPlan,
+                                     DualSchedule, Stage, best_schedule,
+                                     build, load_balance, plan_admission,
+                                     request_stages, wave_makespan)
 from repro.dualmesh.search import DualSearchResult, search
-from repro.dualmesh.runtime import DualMeshRunner
+from repro.dualmesh.runtime import DualMeshRunner, ServeResult
 
 __all__ = ["StageCost", "TpuModel", "decode_cost", "prefill_cost",
            "DualMesh", "split_mesh", "theta_candidates", "ALLOCATIONS",
-           "DualSchedule", "Stage", "best_schedule", "build",
-           "load_balance", "request_stages", "DualSearchResult", "search",
-           "DualMeshRunner"]
+           "AdmissionPlan", "DualSchedule", "Stage", "best_schedule",
+           "build", "load_balance", "plan_admission", "request_stages",
+           "wave_makespan", "DualSearchResult", "search",
+           "DualMeshRunner", "ServeResult"]

@@ -1,53 +1,132 @@
-"""Dual-mesh execution runtime: run the interleaved schedule for real.
+"""Dual-mesh execution runtime: N-stream continuous batching for real.
 
 Two jitted programs live on disjoint device sets (the c-/p-submeshes); JAX
-dispatch is asynchronous, so a prefill on the c-submesh and a decode batch
-on the p-submesh genuinely overlap — the Fig.4b trace on silicon.  On this
+dispatch is asynchronous, so a chunked prefill on the c-submesh and a fused
+decode batch on the p-submesh genuinely overlap — the Fig.4b trace on
+silicon, generalized from two images to an online request queue.  On this
 CPU container both submeshes alias one device (degenerate but exercises the
 whole control path; tests use it).
+
+Scheduler loop (``DualMeshRunner.serve``), one slot per iteration:
+
+  1. advance every active decode group by a quantum of fused steps on the
+     p-submesh (batch = sum of member batches — continuous batching);
+  2. the c-submesh, now idle, admits the next queued request and runs its
+     chunked prefill;
+  3. members that reached their generation target are evicted from their
+     group (their cache rows are sliced out); drained groups retire;
+  4. prefilled streams whose cache positions align are fused into a new
+     decode group once ``group_size`` of them are ready (or the queue is
+     empty) — the makespan-aware admission policy from
+     schedule.plan_admission.
+
+Streams can only fuse at equal cache position because ``DecodeCache.pos``
+is a scalar shared by every row (mid-flight joins would need per-row
+positions / attention masks); equal-length prompts — the benchmark and
+serving-CLI shape — always align, and unequal ones simply form separate
+groups.  ``run_two_streams`` survives as the N=2, group_size=1 special
+case and reproduces the paper's two-image interleave exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
+from collections import deque
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dualmesh.partition import DualMesh
-from repro.dualmesh.schedule import DualSchedule, Stage
+from repro.dualmesh.schedule import plan_admission
 from repro.lm.config import ArchConfig
-from repro.lm.model import decode_step, init_cache
-from repro.lm.steps import make_serve_step
+from repro.lm.model import DecodeCache, decode_step, init_cache
+
+
+def _cache_batch_map(cache: DecodeCache, fn) -> DecodeCache:
+    """Apply ``fn`` to every per-row cache field (batch axis 1); the
+    scalar ``pos`` passes through untouched."""
+    return DecodeCache(*[
+        f if name == "pos" or f is None else fn(f)
+        for name, f in zip(DecodeCache._fields, cache)])
+
+
+def _concat_caches(caches: Sequence[DecodeCache]) -> DecodeCache:
+    first = caches[0]
+    if len(caches) == 1:
+        return first
+    out = []
+    for name, f in zip(DecodeCache._fields, first):
+        if name == "pos" or f is None:
+            out.append(f)
+        else:
+            out.append(jnp.concatenate(
+                [getattr(c, name) for c in caches], axis=1))
+    return DecodeCache(*out)
+
+
+def _take_rows(cache: DecodeCache, rows) -> DecodeCache:
+    idx = jnp.asarray(rows)
+    return _cache_batch_map(cache, lambda f: jnp.take(f, idx, axis=1))
 
 
 @dataclasses.dataclass
 class StreamState:
+    """One admitted request stream."""
+    rid: int
     tokens: jax.Array          # running token buffer (B, t)
     cache: Any
+    gen_target: int            # decode steps still owed after prefill
     done_prefill: bool = False
 
 
+@dataclasses.dataclass
+class _Member:
+    """A stream's slice of a fused decode group."""
+    rid: int
+    row0: int                  # first row in the fused batch
+    batch: int
+    prefix: jax.Array          # tokens up to (and incl.) the prefill emit
+    remaining: int
+
+
+@dataclasses.dataclass
+class DecodeGroup:
+    """Several position-aligned streams decoding as one fused batch."""
+    members: list[_Member]
+    last_tok: jax.Array        # (B_total, 1)
+    cache: Any
+    history: list[jax.Array] = dataclasses.field(default_factory=list)
+
+    @property
+    def batch(self) -> int:
+        return sum(m.batch for m in self.members)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    outputs: list[jax.Array]   # per request, in submission order
+    trace: list[tuple[str, str, float]]
+    stats: dict
+
+
 class DualMeshRunner:
-    """Executes prefill stages on the c-submesh and decode stages on the
-    p-submesh, two request streams interleaved (stream B lags stream A by
-    one group, as in the paper's two-image schedule)."""
+    """Executes chunked prefills on the c-submesh and fused decode batches
+    on the p-submesh, N request streams interleaved (each stream staggered
+    behind its predecessor, as in the paper's two-image schedule)."""
 
     def __init__(self, cfg: ArchConfig, params, dual: DualMesh,
                  max_len: int = 256):
         self.cfg = cfg
         self.dual = dual
         self.max_len = max_len
+        self._shard_c = NamedSharding(dual.c_mesh, P())
+        self._shard_p = NamedSharding(dual.p_mesh, P())
         # place one replica of the params on each submesh
-        self.params_c = jax.device_put(
-            params, NamedSharding(dual.c_mesh, P()))
+        self.params_c = jax.device_put(params, self._shard_c)
         self.params_p = (self.params_c if dual.p_mesh is dual.c_mesh
-                         else jax.device_put(
-                             params, NamedSharding(dual.p_mesh, P())))
-        cdev = dual.c_mesh.devices.flat[0]
-        pdev = dual.p_mesh.devices.flat[0]
+                         else jax.device_put(params, self._shard_p))
 
         def prefill_fn(params, tokens, cache):
             return decode_step(params, cfg, tokens, cache)
@@ -57,44 +136,220 @@ class DualMeshRunner:
             nxt = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
             return nxt, cache
 
-        self._prefill = jax.jit(prefill_fn, device=cdev)
-        self._decode = jax.jit(decode_fn, device=pdev)
+        # submesh placement follows the (committed) inputs — params and
+        # caches are device_put onto the right submesh, so no deprecated
+        # jit(..., device=...) is needed.
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
         self.trace: list[tuple[str, str, float]] = []
 
-    def new_stream(self, prompt: jax.Array) -> StreamState:
+    # ------------------------------------------------------------------
+    # stream lifecycle
+    # ------------------------------------------------------------------
+    def new_stream(self, prompt: jax.Array, gen_steps: int = 0,
+                   rid: int = 0) -> StreamState:
         cache = init_cache(self.cfg, prompt.shape[0], self.max_len)
-        return StreamState(tokens=prompt, cache=cache)
+        return StreamState(rid=rid,
+                           tokens=jax.device_put(prompt, self._shard_c),
+                           cache=jax.device_put(cache, self._shard_c),
+                           gen_target=gen_steps)
 
-    def run_prefill(self, st: StreamState) -> StreamState:
+    def run_prefill(self, st: StreamState,
+                    chunk: int | None = None) -> StreamState:
+        """Chunked prefill on the c-submesh: the prompt is processed in
+        ``chunk``-token slices (the Alg.1 split knob); the final slice's
+        logits emit the first generated token."""
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params_c, st.tokens, st.cache)
+        tokens, cache = st.tokens, st.cache
+        plen = tokens.shape[1]
+        step = chunk if chunk and 0 < chunk < plen else plen
+        logits = None
+        for lo in range(0, plen, step):
+            logits, cache = self._prefill(
+                self.params_c, tokens[:, lo:lo + step], cache)
         nxt = jnp.argmax(logits[:, -1, :self.cfg.vocab], axis=-1)[:, None]
-        st = StreamState(tokens=jnp.concatenate([st.tokens, nxt], 1),
-                         cache=cache, done_prefill=True)
+        out = StreamState(rid=st.rid,
+                          tokens=jnp.concatenate([tokens, nxt], 1),
+                          cache=cache, gen_target=st.gen_target,
+                          done_prefill=True)
         self.trace.append(("prefill", "c", time.perf_counter() - t0))
-        return st
+        return out
 
-    def run_decode(self, st: StreamState, steps: int) -> StreamState:
+    # ------------------------------------------------------------------
+    # fused decode groups (continuous batching on the p-submesh)
+    # ------------------------------------------------------------------
+    def _fuse(self, streams: list[StreamState]) -> DecodeGroup:
+        members, row = [], 0
+        for s in streams:
+            b = s.tokens.shape[0]
+            members.append(_Member(rid=s.rid, row0=row, batch=b,
+                                   prefix=s.tokens,
+                                   remaining=s.gen_target))
+            row += b
+        last = jnp.concatenate([s.tokens[:, -1:] for s in streams], 0)
+        cache = _concat_caches([s.cache for s in streams])
+        return DecodeGroup(members=members,
+                           last_tok=jax.device_put(last, self._shard_p),
+                           cache=jax.device_put(cache, self._shard_p))
+
+    def _decode_group(self, g: DecodeGroup, steps: int) -> None:
         t0 = time.perf_counter()
-        tok = st.tokens[:, -1:]
-        cache = st.cache
-        toks = [st.tokens]
+        tok, cache = g.last_tok, g.cache
         for _ in range(steps):
             tok, cache = self._decode(self.params_p, tok, cache)
-            toks.append(tok)
+            g.history.append(tok)
+        g.last_tok, g.cache = tok, cache
+        for m in g.members:
+            m.remaining -= steps
         self.trace.append(("decode", "p", time.perf_counter() - t0))
-        return StreamState(tokens=jnp.concatenate(toks, 1), cache=cache,
-                           done_prefill=True)
 
+    def _evict(self, g: DecodeGroup, outputs: dict) -> DecodeGroup | None:
+        """Slice finished members' rows out of the fused batch."""
+        done = [m for m in g.members if m.remaining <= 0]
+        if not done:
+            return g
+        for m in done:
+            cols = [h[m.row0:m.row0 + m.batch] for h in g.history]
+            outputs[m.rid] = (jnp.concatenate([m.prefix] + cols, 1)
+                              if cols else m.prefix)
+        alive = [m for m in g.members if m.remaining > 0]
+        if not alive:
+            return None
+        rows = [r for m in alive for r in range(m.row0, m.row0 + m.batch)]
+        g.cache = _take_rows(g.cache, rows)
+        g.last_tok = jnp.take(g.last_tok, jnp.asarray(rows), axis=0)
+        g.history = [jnp.take(h, jnp.asarray(rows), axis=0)
+                     for h in g.history]
+        row = 0
+        for m in alive:
+            m.row0 = row
+            row += m.batch
+        g.members = alive
+        return g
+
+    # ------------------------------------------------------------------
+    # the scheduler loop
+    # ------------------------------------------------------------------
+    def serve(self, prompts: Sequence[jax.Array],
+              gen_steps: int | Sequence[int] = 8,
+              group_size: int | None = None,
+              prefill_chunk: int | None = None,
+              quantum: int | None = None,
+              hw=None) -> ServeResult:
+        """Run the request queue to completion.
+
+        gen_steps      total generated tokens per request (the prefill
+                       emits the first; int or one per request)
+        group_size     decode fusion width; default = the makespan-aware
+                       plan_admission choice (homogeneous queues) else
+                       everything position-aligned
+        prefill_chunk  chunked-prefill slice (None = whole prompt)
+        quantum        fused decode steps per scheduler slot (None = run a
+                       group until its earliest member finishes)
+        """
+        n = len(prompts)
+        gens = ([int(gen_steps)] * n if isinstance(gen_steps, int)
+                else list(gen_steps))
+        assert len(gens) == n
+        if group_size is None:
+            group_size = self._planned_group_size(prompts, gens, hw)
+        group_size = max(1, group_size)
+        if quantum is not None:
+            quantum = max(1, quantum)   # a 0-quantum would never progress
+
+        pending = deque(self.new_stream(p, g, rid=i)
+                        for i, (p, g) in enumerate(zip(prompts, gens)))
+        ready: list[StreamState] = []
+        groups: list[DecodeGroup] = []
+        outputs: dict[int, jax.Array] = {}
+        trace_start = len(self.trace)   # self.trace is cumulative across
+        #                                 calls; the result gets this call's
+        t0 = time.perf_counter()
+        n_prefill_tokens = 0
+        n_decode_tokens = 0
+        fused_sizes: list[int] = []
+
+        while pending or ready or groups:
+            # 1. p-submesh: advance active decode groups (async dispatch —
+            #    overlaps with the prefill dispatched right after)
+            for g in list(groups):
+                q = min(m.remaining for m in g.members)
+                if quantum is not None:
+                    q = min(q, quantum)
+                if q > 0:
+                    self._decode_group(g, q)
+                    n_decode_tokens += q * g.batch
+                kept = self._evict(g, outputs)
+                if kept is None:
+                    groups.remove(g)
+
+            # 2. c-submesh: admit the next request, chunked prefill
+            if pending:
+                st = pending.popleft()
+                want = st.gen_target
+                plen = st.tokens.shape[1]
+                n_prefill_tokens += st.tokens.size
+                st = self.run_prefill(st, prefill_chunk)
+                if want <= 0:           # prefill-only request: no emit
+                    outputs[st.rid] = st.tokens[:, :plen]
+                else:
+                    n_decode_tokens += st.tokens.shape[0]  # prefill emit
+                    st.gen_target -= 1
+                    if st.gen_target <= 0:
+                        outputs[st.rid] = st.tokens
+                    else:
+                        ready.append(st)
+
+            # 3. fuse position-aligned ready streams into decode groups
+            #    once group_size are waiting (or the queue has drained)
+            buckets: dict[tuple, list[StreamState]] = {}
+            for st in ready:
+                key = (st.tokens.shape[1],)
+                buckets.setdefault(key, []).append(st)
+            ready = []
+            for bucket in buckets.values():
+                while (len(bucket) >= group_size
+                       or (bucket and not pending)):
+                    take, bucket = (bucket[:group_size],
+                                    bucket[group_size:])
+                    fused_sizes.append(len(take))
+                    groups.append(self._fuse(take))
+                ready.extend(bucket)
+
+        outs = [outputs[i] for i in range(n)]
+        jax.block_until_ready(outs)
+        wall = time.perf_counter() - t0
+        total = n_prefill_tokens + n_decode_tokens
+        stats = {"n_streams": n, "group_size": group_size,
+                 "fused_sizes": fused_sizes,
+                 "prefill_tokens": n_prefill_tokens,
+                 "decode_tokens": n_decode_tokens,
+                 "total_tokens": total, "wall_s": wall,
+                 "tokens_per_s": total / wall if wall else float("inf")}
+        return ServeResult(outputs=outs, trace=self.trace[trace_start:],
+                           stats=stats)
+
+    def _planned_group_size(self, prompts, gens, hw) -> int:
+        """Makespan-aware default fusion width (homogeneous queues only;
+        mixed shapes fall back to fuse-everything-aligned)."""
+        shapes = {p.shape for p in prompts}
+        if len(shapes) != 1 or len(set(gens)) != 1:
+            return len(prompts)
+        from repro.dualmesh.cost import TpuModel
+        b, plen = prompts[0].shape
+        plan = plan_admission(self.cfg, self.dual, hw or TpuModel(),
+                              b, plen, gens[0], len(prompts))
+        return plan.group_size
+
+    # ------------------------------------------------------------------
+    # the paper's two-image interleave — now the N=2 special case
+    # ------------------------------------------------------------------
     def run_two_streams(self, prompt_a: jax.Array, prompt_b: jax.Array,
                         gen_steps: int = 8):
-        """The Fig.4b interleave: A prefills (c) alone; then A decodes (p)
-        while B prefills (c); then B decodes (p)."""
-        a = self.new_stream(prompt_a)
-        b = self.new_stream(prompt_b)
-        a = self.run_prefill(a)
-        # slot 2: these two dispatches overlap (async on disjoint devices)
-        a_fut = self.run_decode(a, gen_steps)
-        b_fut = self.run_prefill(b)
-        b = self.run_decode(b_fut, gen_steps)
-        return a_fut.tokens, b.tokens, self.trace
+        """Fig.4b: A prefills (c) alone; then A decodes (p) while B
+        prefills (c); then B decodes (p).  Exactly ``serve`` with
+        group_size=1.  Note ``gen_steps`` here counts post-prefill decode
+        steps (seed semantics), so each output has prompt+1+gen tokens."""
+        res = self.serve([prompt_a, prompt_b], gen_steps=gen_steps + 1,
+                         group_size=1)
+        return res.outputs[0], res.outputs[1], res.trace

@@ -1,14 +1,36 @@
-"""Interleaved dual-stream scheduling for LM serving — the paper's §V
-algorithms re-targeted (DESIGN.md §2 mapping):
+"""Interleaved N-stream scheduling for LM serving — the paper's §V
+algorithms re-targeted (DESIGN.md §2 mapping) and generalized from the
+two-image interleave to N concurrent request streams:
 
   paper                         | here
   ------------------------------+------------------------------------------
   layer graph G(V,E)            | request stage chain: prefill -> decode
   c-core / p-core groups        | c-submesh / p-submesh stage groups
-  interleave 2 images (Fig.4b)  | interleave 2 request streams
+  interleave 2 images (Fig.4b)  | stagger N request streams (N=2 = Fig.4b)
   Alg.1 split along ifm height  | split prefill along sequence (chunked
                                 |   prefill) / decode along steps
-  T_b2 (two-batch makespan)     | two-stream makespan (same recurrence)
+  T_b2 (two-batch makespan)     | N-stream flow-shop makespan; the N=2
+                                |   case is exactly the corrected T_b2
+
+N-stream serving
+----------------
+``DualSchedule`` now carries ``n_streams``: the same stage chain is run by
+N identical streams, each staggered behind its predecessor.  ``makespan``
+runs a greedy FIFO simulation over the group latencies t: each submesh
+serves one group at a time, stream j's group i becomes ready when its
+group i-1 completes, and the globally earliest-startable ready group is
+dispatched next (ties broken by ready time, then stream order).  No
+submesh is ever double-booked, at any N.  For N=2 the simulated makespan
+equals the two-stream closed form t[0] + sum(max(t[i], t[i-1])) + t[-1]
+(the paper's corrected T_b2) for chains of any length — validated to
+machine precision over randomized chains in tests/test_nstream.py — so
+existing Table-V comparisons are exactly the N=2 special case.
+
+``plan_admission`` is the makespan-aware admission policy used by the
+runtime (runtime.DualMeshRunner.serve): prefills serialize on the
+c-submesh while decode groups of ``group_size`` fused streams run batched
+on the p-submesh; the policy picks the fusion size minimizing the
+projected makespan of the whole request queue.
 
 The same three allocation seeds (stage-type / greedy / round-robin) and the
 same largest-gap split heuristic are used, so Table-V-style comparisons are
@@ -17,7 +39,6 @@ reproducible on the LM side (benchmarks/dualmesh_bench.py).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 from repro.dualmesh.cost import StageCost, TpuModel, decode_cost, \
@@ -35,6 +56,12 @@ class Stage:
     batch: int
     seq: int                  # prefill: tokens to process; decode: kv_len
     steps: int = 1            # decode steps in this stage
+
+    @property
+    def tokens(self) -> int:
+        """Tokens this stage processes (prefill) or emits (decode)."""
+        return self.batch * (self.seq if self.kind == "prefill"
+                             else self.steps)
 
     def split_seq(self, left: int) -> tuple["Stage", "Stage"]:
         assert self.kind == "prefill" and 0 < left < self.seq
@@ -74,25 +101,58 @@ class DualSchedule:
     dual: DualMesh
     hw: TpuModel
     scheme: str = "custom"
+    n_streams: int = 2        # identical streams running this chain
 
     def latencies(self) -> list[float]:
         return [g.latency(self.cfg, self.dual, self.hw)
                 for g in self.groups]
 
-    def makespan(self) -> float:
-        """Two-stream staggered makespan (the paper's corrected T_b2)."""
+    def makespan(self, n_streams: int | None = None) -> float:
+        """N-stream staggered makespan: greedy FIFO simulation with each
+        submesh serving one group at a time (see module docstring).  The
+        N=2 case equals the paper's corrected T_b2 closed form."""
+        n = self.n_streams if n_streams is None else n_streams
         t = self.latencies()
-        if not t:
+        if not t or n < 1:
             return 0.0
-        total = t[0]
-        for i in range(1, len(t)):
-            total += max(t[i], t[i - 1])
-        return total + t[-1]
+        meshes = [g.mesh for g in self.groups]
+        free: dict[str, float] = {}
+        nxt = [0] * n                  # next group index per stream
+        prev_done = [0.0] * n          # completion of the stream's last group
+        for _ in range(n * len(t)):
+            best = None
+            for j in range(n):
+                i = nxt[j]
+                if i == len(t):
+                    continue
+                ready = prev_done[j]
+                start = max(ready, free.get(meshes[i], 0.0))
+                key = (start, ready, j)
+                if best is None or key < best[0]:
+                    best = (key, j, i, start)
+            _, j, i, start = best
+            end = start + t[i]
+            free[meshes[i]] = end
+            prev_done[j] = end
+            nxt[j] += 1
+        return max(prev_done)
 
-    def throughput_tokens_per_s(self) -> float:
-        toks = 2 * sum(s.seq if s.kind == "prefill" else s.steps * s.batch
-                       for g in self.groups for s in g.stages)
-        span = self.makespan()
+    def stream_tokens(self) -> int:
+        """Tokens one stream processes/emits over the whole chain
+        (prefill counts batch*seq prompt tokens; decode batch*steps)."""
+        return sum(s.tokens for g in self.groups for s in g.stages)
+
+    def total_tokens(self, n_streams: int | None = None) -> int:
+        n = self.n_streams if n_streams is None else n_streams
+        return n * self.stream_tokens()
+
+    def throughput_tokens_per_s(self, n_streams: int | None = None
+                                ) -> float:
+        """Token accounting matches the runtime: every stream's prompt
+        tokens plus its emitted decode tokens, over the N-stream
+        makespan (no hardcoded two-stream factor)."""
+        span = self.makespan(n_streams)
+        toks = self.total_tokens(n_streams)
         return toks / span if span else float("inf")
 
 
@@ -125,23 +185,25 @@ def allocate(stages: list[Stage], cfg, dual: DualMesh, hw,
     raise ValueError(scheme)
 
 
-def build(stages, cfg, dual, hw, scheme) -> DualSchedule:
+def build(stages, cfg, dual, hw, scheme, n_streams: int = 2
+          ) -> DualSchedule:
     groups: list[MeshGroup] = []
     for s, m in zip(stages, allocate(stages, cfg, dual, hw, scheme)):
         if groups and groups[-1].mesh == m:
             groups[-1].stages.append(s)
         else:
             groups.append(MeshGroup(m, [s]))
-    return DualSchedule(groups, cfg, dual, hw, scheme)
+    return DualSchedule(groups, cfg, dual, hw, scheme, n_streams)
 
 
 def load_balance(sched: DualSchedule, rounds: int = 32) -> DualSchedule:
     """Alg.1 analogue: split the boundary stage of the worst-gap pair along
     its sequence (prefill) or steps (decode) and move the remainder to the
-    neighbouring group on the other submesh."""
+    neighbouring group on the other submesh.  Optimizes the schedule's own
+    N-stream makespan, so the split point shifts with N."""
     s = DualSchedule([MeshGroup(g.mesh, list(g.stages))
                       for g in sched.groups], sched.cfg, sched.dual,
-                     sched.hw, sched.scheme + "+lb")
+                     sched.hw, sched.scheme + "+lb", sched.n_streams)
     best = s.makespan()
     for _ in range(rounds):
         t = s.latencies()
@@ -185,7 +247,8 @@ def _try_split(s: DualSchedule, longer: int, shorter: int,
         else:
             trial[longer].stages[0] = keep
             trial[shorter].stages.append(move)
-        val = DualSchedule(trial, s.cfg, s.dual, s.hw).makespan()
+        val = DualSchedule(trial, s.cfg, s.dual, s.hw,
+                           n_streams=s.n_streams).makespan()
         if val < best_val:
             best_val, best_cut = val, cut
     if best_cut is None:
@@ -204,11 +267,77 @@ def _try_split(s: DualSchedule, longer: int, shorter: int,
 
 def best_schedule(stages, cfg, dual: DualMesh,
                   hw: TpuModel = TpuModel(),
-                  with_load_balance: bool = True) -> DualSchedule:
+                  with_load_balance: bool = True,
+                  n_streams: int = 2) -> DualSchedule:
     cands = []
     for scheme in ALLOCATIONS:
-        b = build(stages, cfg, dual, hw, scheme)
+        b = build(stages, cfg, dual, hw, scheme, n_streams)
         cands.append(b)
         if with_load_balance:
             cands.append(load_balance(b))
     return min(cands, key=lambda x: x.makespan())
+
+
+# ==========================================================================
+# Makespan-aware admission (the runtime's continuous-batching policy)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class AdmissionPlan:
+    """Decode-fusion policy for a homogeneous request queue: admit new
+    streams whenever the c-submesh is idle; launch a fused decode group as
+    soon as ``group_size`` streams are prefilled (or the queue drains)."""
+    n_streams: int
+    group_size: int
+    est_makespan: float
+    est_tokens_per_s: float
+
+
+def _submesh_tp(dual: DualMesh, mesh: str) -> int:
+    m = dual.c_mesh if mesh == "c" else dual.p_mesh
+    return m.shape.get("model", 1)
+
+
+def wave_makespan(cfg: ArchConfig, dual: DualMesh, hw: TpuModel,
+                  batch: int, prompt_len: int, gen_steps: int,
+                  n_streams: int, group_size: int) -> float:
+    """Projected makespan of the wave-fused execution: prefills serialize
+    on the c-submesh (one stream per wave slot); each decode group of
+    ``group_size`` streams runs batched (batch*size) on the p-submesh and
+    can only launch once its last member has prefilled."""
+    t_pf = prefill_cost(cfg, batch, prompt_len, dual.c_chips, hw,
+                        _submesh_tp(dual, "c")).latency
+    tp_p = _submesh_tp(dual, "p")
+    p_free = 0.0
+    admitted = 0
+    while admitted < n_streams:
+        size = min(group_size, n_streams - admitted)
+        admitted += size
+        prefill_done = admitted * t_pf          # c-submesh serialized
+        t_dec = decode_cost(cfg, batch * size, prompt_len + gen_steps,
+                            dual.p_chips, gen_steps, hw, tp_p).latency
+        p_free = max(p_free, prefill_done) + t_dec
+    return p_free
+
+
+def plan_admission(cfg: ArchConfig, dual: DualMesh, hw: TpuModel,
+                   batch: int, prompt_len: int, gen_steps: int,
+                   n_streams: int,
+                   max_group: int | None = None) -> AdmissionPlan:
+    """Pick the decode fusion size minimizing projected makespan.
+
+    Small groups maximize prefill/decode overlap (a group launches early);
+    large groups amortize the per-step decode floor over a bigger fused
+    batch (decode is floor/memory-bound, cost.TpuModel.step_floor).  The
+    argmin trades the two — the N-stream generalization of the paper's
+    workload-balancing between the two cores."""
+    hi = min(n_streams, max_group or n_streams)
+    best: AdmissionPlan | None = None
+    toks = n_streams * batch * (prompt_len + gen_steps)
+    for g in range(1, max(1, hi) + 1):
+        span = wave_makespan(cfg, dual, hw, batch, prompt_len, gen_steps,
+                             n_streams, g)
+        if best is None or span < best.est_makespan - 1e-12:
+            best = AdmissionPlan(n_streams, g, span,
+                                 toks / span if span else float("inf"))
+    assert best is not None
+    return best

@@ -30,6 +30,7 @@ class DualSearchResult:
     tokens_per_s: float
     schedule: object
     visited: list[float]
+    n_streams: int = 2
 
 
 def makespan_lower_bound(stages: Sequence[Stage], cfg: ArchConfig,
@@ -52,8 +53,10 @@ def makespan_lower_bound(stages: Sequence[Stage], cfg: ArchConfig,
 
 def search(stages: Sequence[Stage], cfg: ArchConfig, devices=None,
            n_devices: int | None = None, hw: TpuModel = TpuModel(),
-           max_evals: int = 16) -> DualSearchResult:
-    """Plan on chip counts (``n_devices``, abstract) or on real devices."""
+           max_evals: int = 16, n_streams: int = 2) -> DualSearchResult:
+    """Plan on chip counts (``n_devices``, abstract) or on real devices.
+    ``n_streams`` is the number of concurrent staggered request streams
+    the schedule is optimized for (2 = the paper's two-image case)."""
     from repro.dualmesh.partition import abstract_split
     import jax
     devs = list(devices) if devices is not None else None
@@ -86,14 +89,16 @@ def search(stages: Sequence[Stage], cfg: ArchConfig, devices=None,
                 if not relax and not (fits(tp_c, dual.c_chips)
                                       and fits(tp_p, dual.p_chips)):
                     continue
-                sched = best_schedule(stages, cfg, dual, hw)
+                sched = best_schedule(stages, cfg, dual, hw,
+                                      n_streams=n_streams)
                 ms = sched.makespan()
                 if incumbent is None or ms < incumbent.makespan:
                     incumbent = DualSearchResult(
                         dual=dual, theta=dual.theta, tp_c=tp_c, tp_p=tp_p,
                         makespan=ms,
                         tokens_per_s=sched.throughput_tokens_per_s(),
-                        schedule=sched, visited=visited)
+                        schedule=sched, visited=visited,
+                        n_streams=n_streams)
 
     evaluate(0.5)
     work = [(0.1, 0.9)]
@@ -102,6 +107,11 @@ def search(stages: Sequence[Stage], cfg: ArchConfig, devices=None,
         if hi - lo < 0.08:
             continue
         mid = 0.5 * (lo + hi)
+        # admissible at any n_streams: the N-stream makespan is bounded
+        # below by one chain's busy time.  (Scaling by n_streams is NOT
+        # admissible — the bound's per-stage best-mesh assignment can
+        # exceed what a split/balanced schedule achieves per stream, and
+        # an inadmissible bound prunes every theta after the first.)
         lb = makespan_lower_bound(stages, cfg, n, mid, hw)
         if incumbent is not None and lb >= incumbent.makespan:
             continue                      # prune (early termination, §V-B2)

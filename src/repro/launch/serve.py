@@ -1,10 +1,15 @@
 """Serving launcher: dual-mesh (the paper's feature) or single-mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
-      --requests 4 --prompt-len 16 --gen 8 [--theta 0.5 | --search]
+      --requests 8 --prompt-len 16 --gen 8 [--streams 8] \
+      [--theta 0.5 | --search]
 
-With --search, the §V-B design flow picks theta and the TP widths for the
-workload before launching; the realised schedule trace is printed.
+The request queue is served by the N-stream continuous-batching runtime:
+chunked prefills on the c-submesh overlap fused decode batches on the
+p-submesh, with the decode fusion width chosen by the makespan-aware
+admission plan (override with --group-size).  With --search, the §V-B
+design flow picks theta and the TP widths for the workload before
+launching; the realised schedule trace is printed.
 """
 from __future__ import annotations
 
@@ -13,11 +18,10 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import ARCH_IDS, get_arch, get_smoke
-from repro.dualmesh import (DualMeshRunner, TpuModel, request_stages,
-                            search, split_mesh)
+from repro.dualmesh import (DualMeshRunner, TpuModel, plan_admission,
+                            request_stages, search, split_mesh)
 from repro.lm.model import init_params
 
 
@@ -30,6 +34,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--theta", type=float, default=0.5)
+    ap.add_argument("--streams", type=int, default=None,
+                    help="concurrent streams the planner optimizes for "
+                         "(default: --requests)")
+    ap.add_argument("--group-size", type=int, default=None,
+                    help="decode fusion width (default: makespan-aware)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill slice in tokens")
     ap.add_argument("--search", action="store_true",
                     help="run the design-flow search for theta/tp first")
     ap.add_argument("--plan-chips", type=int, default=256,
@@ -37,35 +48,42 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    n_streams = args.streams or max(1, args.requests)
     theta = args.theta
     if args.search:
         stages = request_stages(
-            cfg, [(args.batch, args.prompt_len, args.gen)] * args.requests)
-        res = search(stages, cfg, n_devices=args.plan_chips, max_evals=10)
+            cfg, [(args.batch, args.prompt_len, args.gen)])
+        res = search(stages, cfg, n_devices=args.plan_chips, max_evals=10,
+                     n_streams=n_streams)
         theta = res.theta
         print(f"[serve] design flow: theta={theta:.2f} "
-              f"tp=({res.tp_c},{res.tp_p}) "
+              f"tp=({res.tp_c},{res.tp_p}) n_streams={n_streams} "
               f"planned makespan={res.makespan*1e3:.1f} ms "
               f"tokens/s={res.tokens_per_s:.0f} on {args.plan_chips} chips")
 
     params = init_params(cfg, jax.random.PRNGKey(0))
     dual = split_mesh(jax.devices(), theta)
+    plan = plan_admission(cfg, dual, TpuModel(), args.batch,
+                          args.prompt_len, args.gen, n_streams,
+                          max_group=args.group_size)
+    print(f"[serve] admission plan: group_size="
+          f"{args.group_size or plan.group_size} "
+          f"(est {plan.est_tokens_per_s:.0f} tok/s model-side)")
+
     runner = DualMeshRunner(cfg, params, dual,
                             max_len=args.prompt_len + args.gen + 8)
-    key = jax.random.PRNGKey(1)
-    t0 = time.perf_counter()
-    for r in range(0, max(1, args.requests), 2):
-        pa = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-        pb = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-        a, b, trace = runner.run_two_streams(pa, pb, gen_steps=args.gen)
-    dt = time.perf_counter() - t0
-    toks = args.requests * args.batch * (args.prompt_len + args.gen)
+    keys = jax.random.split(jax.random.PRNGKey(1), max(1, args.requests))
+    prompts = [jax.random.randint(k, (args.batch, args.prompt_len), 0,
+                                  cfg.vocab) for k in keys]
+    res = runner.serve(prompts, gen_steps=args.gen,
+                       group_size=args.group_size or plan.group_size,
+                       prefill_chunk=args.prefill_chunk)
+    s = res.stats
     print(f"[serve] {args.requests} requests x {args.batch} batch: "
-          f"{dt*1e3:.0f} ms ({toks/dt:.0f} tok/s on "
-          f"{len(jax.devices())} local device(s))")
-    for kind, mesh_name, t in runner.trace:
+          f"{s['wall_s']*1e3:.0f} ms ({s['tokens_per_s']:.0f} tok/s, "
+          f"{s['total_tokens']} tokens, fused decode batches "
+          f"{s['fused_sizes']}, on {len(jax.devices())} local device(s))")
+    for kind, mesh_name, t in res.trace:
         print(f"  {kind:<8} on {mesh_name}-mesh  {t*1e3:7.1f} ms")
     return 0
 

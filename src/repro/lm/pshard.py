@@ -1,7 +1,9 @@
 """Activation sharding hints (MaxText-style logical constraints).
 
 ``hint(x, 'batch', None, 'model')`` applies a with_sharding_constraint
-resolved against the ambient mesh (jax.set_mesh).  Outside any mesh (CPU
+resolved against the ambient mesh (repro.meshcompat.use_mesh /
+current_mesh, portable across the jax.set_mesh API move).  Outside any
+mesh (CPU
 smoke tests) it is a no-op; axes that are missing from the mesh or do not
 divide the dimension are dropped (same fallback policy as
 repro.launch.sharding).
@@ -18,6 +20,8 @@ import math
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from repro.meshcompat import current_mesh
 
 BATCH = "batch"
 MODEL = "model"
@@ -37,10 +41,7 @@ def dp_only() -> bool:
 
 
 def _mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or not m.axis_names:
-        return None
-    return m
+    return current_mesh()
 
 
 def hint(x, *logical):

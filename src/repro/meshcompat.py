@@ -1,0 +1,67 @@
+"""Version-portable mesh accessors.
+
+JAX moved the ambient-mesh API twice across the versions this repo meets:
+
+  >= 0.5    jax.sharding.get_abstract_mesh() / jax.set_mesh(mesh)
+  0.4.x     the ambient mesh lives in jax.interpreters.pxla
+            .thread_resources.env.physical_mesh and is entered with the
+            ``with mesh:`` context manager
+
+Everything in the repo that needs the ambient mesh (pshard hints, the
+dry-run lowering path) routes through the two helpers here so the rest of
+the code is version-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def _nonempty(mesh) -> bool:
+    if mesh is None:
+        return False
+    if getattr(mesh, "empty", False):
+        return False
+    return bool(getattr(mesh, "axis_names", ()))
+
+
+def current_mesh():
+    """The ambient (abstract or physical) mesh, or ``None`` outside any
+    mesh context.  Tries the new API first, then the 0.4.x thread-local."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        try:
+            m = get_abstract()
+        except Exception:
+            m = None
+        if _nonempty(m):
+            return m
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    return m if _nonempty(m) else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """``with use_mesh(m):`` — ambient-mesh context on any JAX version.
+
+    New JAX: ``jax.set_mesh`` (itself a context manager).  0.4.x: the Mesh
+    object's own context manager, which populates ``thread_resources``."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is None:
+        with mesh:
+            yield
+        return
+    ctx = set_mesh(mesh)
+    if hasattr(ctx, "__enter__"):
+        with ctx:
+            yield
+    else:                        # set_mesh mutated global state; undo after
+        try:
+            yield
+        finally:
+            set_mesh(None)

@@ -1,0 +1,89 @@
+"""Test-session bootstrap.
+
+The property tests use ``hypothesis``.  CI installs the real package
+(requirements-dev.txt); hermetic containers that cannot pip-install get a
+minimal deterministic stand-in registered here *before* test collection,
+so the property tests still run (seeded example sweep) instead of being
+skipped.  Only the strategy surface the test-suite actually uses is
+implemented: integers / sampled_from / booleans / tuples / lists / builds.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback():
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample            # sample(rng) -> value
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    def tuples(*strats):
+        return _Strategy(lambda r: tuple(s.sample(r) for s in strats))
+
+    def lists(elem, min_size=0, max_size=10, **_):
+        return _Strategy(
+            lambda r: [elem.sample(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+    def builds(target, *strats, **kw_strats):
+        return _Strategy(lambda r: target(
+            *(s.sample(r) for s in strats),
+            **{k: s.sample(r) for k, s in kw_strats.items()}))
+
+    def just(value):
+        return _Strategy(lambda r: value)
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)      # deterministic example sweep
+                n = getattr(wrapper, "_fallback_max_examples", 10)
+                for _ in range(n):
+                    fn(*args, *(s.sample(rng) for s in strats), **kwargs)
+            # NOTE: no functools.wraps — copying __wrapped__ would make
+            # pytest read the original signature and demand its sampled
+            # parameters as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def settings(max_examples=10, deadline=None, **_):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for f in (integers, sampled_from, booleans, tuples, lists, builds,
+              just):
+        setattr(st_mod, f.__name__, f)
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    hyp.__fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when installed)
+except ImportError:
+    _install_hypothesis_fallback()

@@ -142,12 +142,18 @@ def test_search_respects_hbm():
 # --------------------------------------------------------------------------
 # Runtime (degenerate 1-device dual mesh)
 # --------------------------------------------------------------------------
-def test_runtime_two_streams_and_consistency():
+def _smoke_runner(max_len=64):
     scfg = get_smoke("qwen2_0_5b")
     from repro.lm.model import init_params
     params = init_params(scfg, jax.random.PRNGKey(0))
     dual = split_mesh(jax.devices(), 0.5)
-    r = DualMeshRunner(scfg, params, dual, max_len=64)
+    return scfg, DualMeshRunner(scfg, params, dual, max_len=max_len)
+
+
+def test_runtime_two_streams_and_consistency():
+    """The paper's Fig.4b interleave survives as the N=2 / group_size=1
+    special case of the continuous-batching runtime."""
+    scfg, r = _smoke_runner()
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                                 scfg.vocab)
     a, b, trace = r.run_two_streams(prompt, prompt, gen_steps=4)
@@ -157,3 +163,22 @@ def test_runtime_two_streams_and_consistency():
     kinds = [(k, m) for k, m, _ in trace]
     assert kinds == [("prefill", "c"), ("decode", "p"),
                      ("prefill", "c"), ("decode", "p")]
+
+
+def test_runtime_nstream_serve_matches_unfused():
+    """Fused decode groups (continuous batching) emit exactly the tokens
+    the streams would emit alone, across mixed generation lengths,
+    chunked prefill, and mid-group eviction."""
+    scfg, r = _smoke_runner()
+    prompts = [jax.random.randint(k, (2, 8), 0, scfg.vocab)
+               for k in jax.random.split(jax.random.PRNGKey(2), 4)]
+    gens = [5, 3, 5, 7]
+    res = r.serve(prompts, gen_steps=gens, group_size=2,
+                  prefill_chunk=4, quantum=2)
+    assert [o.shape for o in res.outputs] == [(2, 13), (2, 11), (2, 13),
+                                              (2, 15)]
+    _, ref = _smoke_runner()
+    for p, g, out in zip(prompts, gens, res.outputs):
+        solo = ref.serve([p], gen_steps=g, group_size=1)
+        np.testing.assert_array_equal(np.asarray(solo.outputs[0]),
+                                      np.asarray(out))

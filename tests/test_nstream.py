@@ -1,0 +1,180 @@
+"""N-stream continuous-batching scheduler: the ISSUE-1 generalization of
+the paper's two-image interleave.  Covers the flow-shop makespan (N=2
+reduction to the seed's closed form), load-balance monotonicity at every
+N, makespan-aware admission, and runtime-vs-model token accounting."""
+import jax
+import pytest
+
+from repro.configs.registry import get_arch, get_smoke
+from repro.dualmesh import (DualMeshRunner, TpuModel, best_schedule, build,
+                            load_balance, plan_admission, request_stages,
+                            search, split_mesh, wave_makespan)
+from repro.dualmesh.partition import abstract_split
+
+CFG = get_arch("qwen2_5_14b")
+HW = TpuModel()
+DUAL = abstract_split(256, 0.5)
+
+
+def _sched(n_streams, scheme="stage_type"):
+    stages = request_stages(CFG, [(8, 4096, 64)])
+    return build(stages, CFG, DUAL, HW, scheme, n_streams=n_streams)
+
+
+# --------------------------------------------------------------------------
+# Makespan simulation
+# --------------------------------------------------------------------------
+def _closed_form(t):
+    """The seed's corrected T_b2 two-stream closed form."""
+    return t[0] + sum(max(t[i], t[i - 1])
+                      for i in range(1, len(t))) + t[-1]
+
+
+def test_nstream_makespan_reduces_to_two_stream_recurrence():
+    """The seed's corrected T_b2 closed form is exactly the N=2 case of
+    the FIFO simulation — including multi-request chains with many
+    alternating groups, where a naive flow-shop recurrence would
+    double-book a submesh and under-report."""
+    s2 = _sched(2)
+    assert s2.makespan() == pytest.approx(_closed_form(s2.latencies()),
+                                          rel=1e-12)
+    # 4-request chain -> 8 alternating groups
+    stages = request_stages(CFG, [(8, 8192, 256)] * 4)
+    for scheme in ("stage_type", "round_robin"):
+        s = build(stages, CFG, DUAL, HW, scheme, n_streams=2)
+        assert len(s.groups) > 2
+        assert s.makespan() == pytest.approx(_closed_form(s.latencies()),
+                                             rel=1e-12)
+
+
+def test_two_stream_equivalence_on_random_chains():
+    """N=2 simulation == closed form for arbitrary latency chains."""
+    import random
+    from repro.dualmesh.schedule import DualSchedule, MeshGroup, Stage
+
+    rng = random.Random(0)
+    for _ in range(200):
+        g = rng.randint(1, 9)
+        lat = [rng.choice([1, 2, 3, 5, 8, 100]) * rng.random()
+               for _ in range(g)]
+        sched = DualSchedule(
+            [MeshGroup("c" if i % 2 == 0 else "p", []) for i in range(g)],
+            CFG, DUAL, HW, n_streams=2)
+        sched.latencies = lambda lat=lat: lat      # inject raw chain
+        assert sched.makespan() == pytest.approx(_closed_form(lat),
+                                                 rel=1e-9)
+
+
+def test_single_stream_makespan_is_chain_sum():
+    s = _sched(1)
+    assert s.makespan() == pytest.approx(sum(s.latencies()))
+
+
+def test_makespan_monotone_and_amortizing_in_n():
+    """More streams: longer makespan, but shorter per-stream share (the
+    stagger amortizes the pipeline fill/drain) — so throughput rises."""
+    s = _sched(2)
+    spans = [s.makespan(n) for n in (1, 2, 4, 8, 16)]
+    assert all(b > a for a, b in zip(spans, spans[1:]))
+    per_stream = [sp / n for sp, n in zip(spans, (1, 2, 4, 8, 16))]
+    assert all(b <= a + 1e-12 for a, b in zip(per_stream, per_stream[1:]))
+    thr = [s.throughput_tokens_per_s(n) for n in (1, 2, 4, 8, 16)]
+    assert all(b > a for a, b in zip(thr, thr[1:]))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_load_balance_never_worse_at_any_n(n):
+    for scheme in ("stage_type", "greedy", "round_robin"):
+        s = _sched(n, scheme)
+        lb = load_balance(s)
+        assert lb.n_streams == n
+        assert lb.makespan() <= s.makespan() + 1e-12
+
+
+def test_best_schedule_throughput_nondecreasing_in_n():
+    stages = request_stages(CFG, [(8, 4096, 64)])
+    thr = [best_schedule(stages, CFG, DUAL, HW,
+                         n_streams=n).throughput_tokens_per_s()
+           for n in (2, 4, 8, 16)]
+    assert all(b >= a for a, b in zip(thr, thr[1:]))
+
+
+# --------------------------------------------------------------------------
+# Token accounting (no hardcoded two-stream factor)
+# --------------------------------------------------------------------------
+def test_token_accounting_is_batch_and_n_aware():
+    s = _sched(4)
+    per_stream = 8 * 4096 + 8 * 64          # batch*(prompt + gen)
+    assert s.stream_tokens() == per_stream
+    assert s.total_tokens() == 4 * per_stream
+    assert s.total_tokens(16) == 16 * per_stream
+
+
+def test_runtime_edge_requests():
+    """gen_steps=0 is prefill-only (no phantom emit); quantum=0 is
+    clamped rather than spinning forever."""
+    scfg = get_smoke("qwen2_0_5b")
+    from repro.lm.model import init_params
+    params = init_params(scfg, jax.random.PRNGKey(0))
+    dual = split_mesh(jax.devices(), 0.5)
+    r = DualMeshRunner(scfg, params, dual, max_len=32)
+    p = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0, scfg.vocab)
+    res = r.serve([p, p], gen_steps=[0, 2], quantum=0)
+    assert res.outputs[0].shape == (1, 4)       # prompt unchanged
+    assert res.outputs[1].shape == (1, 6)       # prompt + 2 generated
+    assert res.stats["decode_tokens"] == 2
+
+
+def test_runtime_tokens_match_schedule_accounting():
+    """The model's throughput numerator equals the tokens the runtime
+    actually processes/emits for the same (N x (batch, prompt, gen))
+    workload."""
+    scfg = get_smoke("qwen2_0_5b")
+    from repro.lm.model import init_params
+    params = init_params(scfg, jax.random.PRNGKey(0))
+    dual = split_mesh(jax.devices(), 0.5)
+    r = DualMeshRunner(scfg, params, dual, max_len=32)
+    n, batch, plen, gen = 3, 2, 8, 4
+    prompts = [jax.random.randint(k, (batch, plen), 0, scfg.vocab)
+               for k in jax.random.split(jax.random.PRNGKey(1), n)]
+    res = r.serve(prompts, gen_steps=gen)
+    sched = build(request_stages(scfg, [(batch, plen, gen)]), scfg, DUAL,
+                  HW, "stage_type", n_streams=n)
+    assert res.stats["total_tokens"] == sched.total_tokens()
+    assert res.stats["prefill_tokens"] == n * batch * plen
+    assert res.stats["decode_tokens"] == n * batch * gen
+
+
+# --------------------------------------------------------------------------
+# Makespan-aware admission
+# --------------------------------------------------------------------------
+def test_admission_plan_beats_or_matches_extremes():
+    plan = plan_admission(CFG, DUAL, HW, 8, 4096, 256, 8)
+    assert 1 <= plan.group_size <= 8
+    for g in (1, 8):
+        assert plan.est_makespan <= wave_makespan(
+            CFG, DUAL, HW, 8, 4096, 256, 8, g) + 1e-12
+
+
+def test_admission_respects_max_group():
+    plan = plan_admission(CFG, DUAL, HW, 8, 4096, 256, 16, max_group=2)
+    assert plan.group_size <= 2
+
+
+# --------------------------------------------------------------------------
+# Search threading
+# --------------------------------------------------------------------------
+def test_search_carries_n_streams():
+    stages = request_stages(CFG, [(8, 4096, 64)])
+    res = search(stages, CFG, n_devices=256, max_evals=4, n_streams=8)
+    assert res.n_streams == 8
+    assert res.schedule.n_streams == 8
+    assert res.makespan == pytest.approx(res.schedule.makespan())
+
+
+def test_search_still_explores_theta():
+    """The branch-and-bound must keep visiting thetas beyond the 0.5
+    seed — an inadmissible (over-scaled) bound would prune everything."""
+    stages = request_stages(CFG, [(8, 1024, 1024)] * 2)
+    res = search(stages, CFG, n_devices=256, max_evals=8)
+    assert len(res.visited) > 1

@@ -5,8 +5,18 @@ the structural evidence used in place of wall-clock (CPU-only container).
 AI (arithmetic intensity) is computed from true HBM traffic under the
 kernel's blocking: inputs read once per tile-pass, outputs written once.
 v5e ridge point = 197e12 / 819e9 ~= 240 flops/byte.
+
+``--smoke`` additionally measures real wall-clock on this container
+(interpret mode) for the two perf claims this repo tracks from PR 2 on —
+im2col-materializing vs implicit-GEMM conv, and the fused dw->pw block vs
+the unfused two-kernel path — and writes ``BENCH_kernels.json`` so CI keeps
+a perf trajectory (DESIGN.md §6).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import sys
 
 RIDGE = 197e12 / 819e9
 
@@ -66,3 +76,155 @@ def run_all():
     print(f"(ridge ~{RIDGE:.0f} fl/B on v5e; depthwise/decode/rmsnorm are "
           f"HBM-bound by design — the p-class kernels)")
     return rows
+
+
+# --------------------------------------------------------------------------
+# --smoke: measured wall-clock on this container -> BENCH_kernels.json
+# --------------------------------------------------------------------------
+def _time_ms(fn, reps: int = 3) -> float:
+    from repro.kernels.util import bench_best_us
+    return bench_best_us(fn, reps=reps) / 1e3
+
+
+def smoke(out_path: str = "BENCH_kernels.json", reps: int = 4) -> dict:
+    """Measure im2col-vs-implicit and fused-vs-unfused wall-clock on small
+    model-zoo shapes, write the JSON perf artifact, return it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune
+    from repro.kernels.conv_gemm.kernel import (conv2d_implicit_gemm,
+                                                matmul_bias_act)
+    from repro.kernels.conv_gemm.ref import im2col
+    from repro.kernels.conv_gemm.ops import pointwise_conv
+    from repro.kernels.depthwise.ops import depthwise
+    from repro.kernels.fused_block.ops import (fused_dw_pw,
+                                               fused_inverted_residual)
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    report: dict = {"backend": jax.default_backend(),
+                    "interpret": jax.default_backend() == "cpu",
+                    "reps": reps, "conv_implicit_gemm": [],
+                    "fused_dw_pw": [], "fused_pw_dw_pw": [],
+                    "autotune": []}
+
+    print("\n## kernel smoke bench (wall-clock on this container)")
+    # -- implicit GEMM vs HBM-materialized im2col (zoo conv shapes) --------
+    for h, ci, co, k, s, p in [(56, 16, 64, 3, 1, 1),    # sqz fire e3x3
+                               (28, 32, 128, 3, 1, 1)]:  # fire4-ish
+        x = (jax.random.normal(keys[0], (1, h, h, ci)) * 0.5)
+        w = (jax.random.normal(keys[1], (k, k, ci, co)) * 0.2)
+        ho = (h + 2 * p - k) // s + 1
+        patch_bytes = ho * ho * k * k * ci * 4        # the HBM blow-up
+        ifm_bytes = h * h * ci * 4                    # implicit traffic
+
+        def run_im2col():
+            pm, (n, ho_, wo_) = im2col(x, k, k, s, p)
+            return matmul_bias_act(pm, w.reshape(k * k * ci, co)
+                                   ).reshape(n, ho_, wo_, co)
+
+        t_im2col = _time_ms(run_im2col, reps)
+        t_impl = _time_ms(lambda: conv2d_implicit_gemm(x, w, stride=s,
+                                                       pad=p), reps)
+        row = {"shape": f"{h}x{h}x{ci}->{co} k{k} s{s}",
+               "im2col_ms": round(t_im2col, 2),
+               "implicit_ms": round(t_impl, 2),
+               "speedup": round(t_im2col / t_impl, 2),
+               "im2col_hbm_patch_bytes": patch_bytes,
+               "implicit_ifm_bytes": ifm_bytes,
+               "hbm_traffic_ratio": round(patch_bytes / ifm_bytes, 2)}
+        report["conv_implicit_gemm"].append(row)
+        print(f"conv {row['shape']:<24} im2col {t_im2col:8.1f}ms  "
+              f"implicit {t_impl:8.1f}ms  ({row['speedup']}x, "
+              f"{row['hbm_traffic_ratio']}x less HBM)")
+
+    # -- fused dw->pw vs unfused two-kernel path (MobileNet-v1 blocks) -----
+    for h, c, co, s in [(14, 256, 256, 1),   # mbv1 dw7..11/pw
+                        (14, 512, 512, 1),
+                        (7, 1024, 1024, 1)]:
+        x = (jax.random.normal(keys[0], (1, h, h, c)) * 0.5)
+        dw_w = (jax.random.normal(keys[1], (3, 3, c)) * 0.3)
+        dw_b = jnp.zeros((c,))
+        pw_w = (jax.random.normal(keys[2], (c, co)) * 0.2)
+        pw_b = jnp.zeros((co,))
+
+        def run_unfused():
+            y = depthwise(x, dw_w, dw_b, stride=s, pad=1, act="relu6")
+            return pointwise_conv(y, pw_w, pw_b, act="relu6")
+
+        def run_fused():
+            return fused_dw_pw(x, dw_w, dw_b, pw_w, pw_b, stride=s, pad=1,
+                               dw_act="relu6", pw_act="relu6")
+
+        t_unf = _time_ms(run_unfused, reps)
+        t_fus = _time_ms(run_fused, reps)
+        row = {"shape": f"{h}x{h}x{c}->{co} s{s}",
+               "unfused_ms": round(t_unf, 2), "fused_ms": round(t_fus, 2),
+               "speedup": round(t_unf / t_fus, 2),
+               "hbm_intermediate_bytes_saved": h * h * c * 4 // (s * s)}
+        report["fused_dw_pw"].append(row)
+        print(f"dw->pw {row['shape']:<22} unfused {t_unf:8.1f}ms  "
+              f"fused {t_fus:8.1f}ms  ({row['speedup']}x)")
+
+    # -- fused inverted residual (MobileNet-v2 blocks) ---------------------
+    for h, ci, t_exp, s in [(14, 64, 6, 1),      # mbv2 b8-ish
+                            (7, 160, 6, 1)]:     # mbv2 b15-ish
+        cm, co = ci * t_exp, ci
+        x = (jax.random.normal(keys[0], (1, h, h, ci)) * 0.5)
+        ew = (jax.random.normal(keys[1], (ci, cm)) * 0.2)
+        dw_w = (jax.random.normal(keys[2], (3, 3, cm)) * 0.3)
+        pw = (jax.random.normal(keys[3], (cm, co)) * 0.2)
+        eb, db, pb = jnp.zeros((cm,)), jnp.zeros((cm,)), jnp.zeros((co,))
+
+        def run_unfused():
+            y = pointwise_conv(x, ew, eb, act="relu6")
+            y = depthwise(y, dw_w, db, stride=s, pad=1, act="relu6")
+            return pointwise_conv(y, pw, pb) + x
+
+        def run_fused():
+            return fused_inverted_residual(x, ew, eb, dw_w, db, pw, pb, x,
+                                           stride=s, pad=1)
+
+        t_unf = _time_ms(run_unfused, reps)
+        t_fus = _time_ms(run_fused, reps)
+        row = {"shape": f"{h}x{h}x{ci} t{t_exp} s{s}",
+               "unfused_ms": round(t_unf, 2), "fused_ms": round(t_fus, 2),
+               "speedup": round(t_unf / t_fus, 2),
+               "hbm_intermediate_bytes_saved":
+                   (h * h * cm + (h // s) * (h // s) * cm) * 4}
+        report["fused_pw_dw_pw"].append(row)
+        print(f"pw->dw->pw {row['shape']:<18} unfused {t_unf:8.1f}ms  "
+              f"fused {t_fus:8.1f}ms  ({row['speedup']}x)")
+
+    # -- autotuner: tune one signature per kind, report the winners --------
+    for sig in [autotune.LayerSig("conv", 14, 14, 32, 64, 3, 3, 1, 1),
+                autotune.LayerSig("fused_dw_pw", 14, 14, 128, 128, 3, 3,
+                                  1, 1)]:
+        cfg = autotune.tune_layer(sig, reps=1)
+        entry = autotune.load_cache()["entries"][sig.key()]
+        report["autotune"].append({"sig": sig.key(), "config": cfg,
+                                   "us": entry["us"]})
+        print(f"autotune {sig.key():<42} -> {cfg}")
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {out_path}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="measure wall-clock and write BENCH_kernels.json")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--reps", type=int, default=4)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke(args.out, reps=args.reps)
+    else:
+        run_all()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,15 +2,22 @@
 
 Each kernel ships three files (repo convention):
   kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target;
-             validated with interpret=True on this CPU container)
-  ops.py     jit'd wrapper / dispatch
+             validated in interpret mode on this CPU container — the
+             ``interpret=None`` default auto-detects the backend)
+  ops.py     dispatch wrapper (consults the block-shape autotune cache)
   ref.py     pure-jnp oracle used by the allclose test sweeps
 
-Kernels:
-  conv_gemm   c-core analogue — im2col GEMM, MXU 128x128 tiles, fused
-              bias+ReLU6 epilogue
-  depthwise   p-core analogue — VMEM halo tile (the line-buffer port)
-  attention   flash attention (train/prefill) + split-K decode; int8-KV
-              variants live in repro.lm.modules
-  rmsnorm     fused norm used by every assigned arch
+Kernels (see DESIGN.md for the dual-OPU mapping):
+  conv_gemm    c-core analogue — implicit-GEMM conv (patch tiles gathered
+               in VMEM, no HBM im2col matrix) + tiled GEMM 1x1/fc fast
+               path, fused bias+ReLU6 epilogue
+  depthwise    p-core analogue — VMEM halo tile (the line-buffer port)
+  fused_block  dw->pw and pw-expand->dw->pw-project in ONE pallas_call;
+               the intermediate feature maps never leave VMEM
+  attention    flash attention (train/prefill) + split-K decode; int8-KV
+               variants live in repro.lm.modules
+  rmsnorm      fused norm used by every assigned arch
+
+Shared helpers: kernels/util.py (padding, grid cdiv, interpret default);
+kernels/autotune.py (JSON-cached per-layer-signature block shapes).
 """

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.util import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -71,12 +73,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                              "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0 (GQA).
 
     Returns (B, Hq, Sq, D).  KV is never materialised per-q-head: the
     BlockSpec index map folds the GQA group by integer division.
     """
+    interpret = resolve_interpret(interpret)
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
@@ -128,7 +132,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_len: jax.Array | None = None, *,
-                     block_k: int = 512, interpret: bool = True) -> jax.Array:
+                     block_k: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
     """Single-token decode: q (B, Hq, 1, D) against k/v (B, Hkv, S, D).
 
     The p-class kernel: streams the KV cache once through VMEM (split-K

@@ -19,7 +19,7 @@ from repro.kernels.attention.ref import attention_ref
                                              "interpret"))
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, use_pallas: bool = False,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     if use_pallas:
         return flash_attention(q, k, v, causal=causal, interpret=interpret)
     return attention_ref(q, k, v, causal=causal)

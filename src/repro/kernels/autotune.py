@@ -1,0 +1,298 @@
+"""Block-shape autotuner for the Pallas kernels (DESIGN.md §4).
+
+Ahn-style near-optimal tile geometry is shape-dependent: the best
+(block_m, block_n, block_k) / channel-block / row-block for a 112x112x32
+depthwise layer is not the best for a 7x7x1024 pointwise layer.  Rather than
+bake one heuristic into every wrapper, each op consults this module with its
+*layer signature*; the tuner benchmarks a small candidate set once per
+signature, caches the winner in a JSON file, and every later call (same
+process or a fresh one) gets the cached config with zero benchmark cost.
+
+Cache format (``autotune_cache.json``)::
+
+    {
+      "version": 1,
+      "entries": {
+        "conv/h14.w14.ci32.co64.k3x3.s1.p1/f32": {
+          "config": {"block_h": 9, "block_n": 64},
+          "us": 1234.5,
+          "backend": "cpu"
+        },
+        ...
+      }
+    }
+
+Keys are ``kind/signature/dtype``; ``us`` is the winning median wall-clock in
+microseconds on the machine that tuned.  The cache path defaults to
+``results/autotune_cache.json`` (cwd-relative, matching the benchmarks'
+results/ convention) and can be redirected with the
+``REPRO_AUTOTUNE_CACHE`` env var (tests and CI point it at a temp file).
+
+The lookup path (``get_config``) is pure python — cheap enough to run at
+trace time inside the jit'd wrappers.  The benchmark path (``tune`` /
+``tune_layer``) executes kernels eagerly and must only be called outside jit
+(benchmarks/kernel_specs.py --smoke, tests, or an explicit warm-up).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+_DTYPE_TAGS = {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}
+
+# in-memory mirror of the JSON files, keyed by resolved path
+_MEM: dict[str, dict[str, Any]] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSig:
+    """Kernel-shape signature — the autotune cache key (DESIGN.md §4)."""
+
+    kind: str                    # 'conv' | 'pointwise' | 'depthwise' |
+                                 # 'fused_dw_pw' | 'fused_pw_dw_pw'
+    H: int
+    W: int
+    C_i: int
+    C_o: int
+    K_h: int = 1
+    K_w: int = 1
+    stride: int = 1
+    pad: int = 0
+    dtype: str = "float32"
+
+    def key(self) -> str:
+        tag = _DTYPE_TAGS.get(self.dtype, self.dtype)
+        return (f"{self.kind}/h{self.H}.w{self.W}.ci{self.C_i}.co{self.C_o}"
+                f".k{self.K_h}x{self.K_w}.s{self.stride}.p{self.pad}/{tag}")
+
+
+def cache_path(path: str | None = None) -> str:
+    if path:
+        return path
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    # repo-relative (matches the results/ convention of benchmarks/run.py)
+    return os.path.join("results", "autotune_cache.json")
+
+
+def load_cache(path: str | None = None) -> dict[str, Any]:
+    p = cache_path(path)
+    if p in _MEM:
+        return _MEM[p]
+    data: dict[str, Any] = {"version": CACHE_VERSION, "entries": {}}
+    try:
+        with open(p) as f:
+            raw = json.load(f)
+        if raw.get("version") == CACHE_VERSION:
+            data = raw
+    except (OSError, ValueError):
+        pass
+    _MEM[p] = data
+    return data
+
+
+def save_cache(data: dict[str, Any], path: str | None = None) -> None:
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+    _MEM[p] = data
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process mirror (tests use this to force a re-read)."""
+    _MEM.clear()
+
+
+# --------------------------------------------------------------------------
+# lookup path (trace-time cheap)
+# --------------------------------------------------------------------------
+def get_config(sig: LayerSig, path: str | None = None) -> dict | None:
+    """Cached winning config for ``sig``, or None on a miss.
+
+    Entries tuned on a different backend are treated as misses: block
+    shapes ranked by CPU interpret-mode wall-clock say nothing about MXU
+    performance (and vice versa), so a TPU run must not inherit a cache
+    populated by CPU CI.
+    """
+    entry = load_cache(path)["entries"].get(sig.key())
+    if not entry:
+        return None
+    import jax
+    if entry.get("backend") != jax.default_backend():
+        return None
+    return dict(entry["config"])
+
+
+def heuristic_config(sig: LayerSig) -> dict:
+    """Default block shapes used on a cache miss — the pre-tuner behaviour."""
+    if sig.kind == "conv":
+        wo = max(1, (sig.W + 2 * sig.pad - sig.K_w) // sig.stride + 1)
+        ho = max(1, (sig.H + 2 * sig.pad - sig.K_h) // sig.stride + 1)
+        return {"block_h": max(1, min(ho, -(-256 // wo))),
+                "block_n": min(128, max(sig.C_o, 8))}
+    if sig.kind == "pointwise":
+        return {"block": (128, 128, 128)}
+    if sig.kind == "depthwise":
+        # largest channel block whose halo tile fits half a core's VMEM
+        tile = (sig.H + sig.K_h - 1) * (sig.W + sig.K_w - 1) * 4
+        bc = max(8, (8 * 1024 * 1024) // max(tile, 1))
+        bc = min(bc, sig.C_i)
+        return {"block_c": max(8, bc - bc % 8) if bc >= 8 else max(1, bc)}
+    if sig.kind in ("fused_dw_pw", "fused_pw_dw_pw"):
+        return {"block_c": min(128, max(sig.C_i, 8)),
+                "block_n": min(128, max(sig.C_o, 8))}
+    raise ValueError(f"unknown kernel kind {sig.kind!r}")
+
+
+def candidates(sig: LayerSig) -> list[dict]:
+    """Small per-kind candidate sets (kept tiny: interpret mode is slow)."""
+    out: list[dict] = [heuristic_config(sig)]
+    if sig.kind == "conv":
+        ho = max(1, (sig.H + 2 * sig.pad - sig.K_h) // sig.stride + 1)
+        for bh in (1, 4, 8, 16):
+            for bn in (64, 128):
+                out.append({"block_h": min(bh, ho),
+                            "block_n": min(bn, max(sig.C_o, 8))})
+    elif sig.kind == "pointwise":
+        for b in ((64, 64, 64), (128, 128, 128), (256, 128, 128)):
+            out.append({"block": b})
+    elif sig.kind == "depthwise":
+        for bc in (32, 64, 128):
+            out.append({"block_c": min(bc, max(sig.C_i, 1))})
+    else:
+        for bc in (64, 128):
+            for bn in (64, 128):
+                out.append({"block_c": min(bc, max(sig.C_i, 8)),
+                            "block_n": min(bn, max(sig.C_o, 8))})
+    # dedupe, preserving order
+    seen: set[str] = set()
+    uniq = []
+    for c in out:
+        k = json.dumps(c, sort_keys=True)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(c)
+    return uniq
+
+
+# --------------------------------------------------------------------------
+# benchmark path (eager only)
+# --------------------------------------------------------------------------
+def _time_us(fn: Callable[[], Any], reps: int = 3) -> float:
+    from repro.kernels.util import bench_best_us
+    return bench_best_us(fn, reps=reps)
+
+
+def tune(sig: LayerSig, run: Callable[[dict], Callable[[], Any]], *,
+         path: str | None = None, reps: int = 3,
+         force: bool = False) -> dict:
+    """Benchmark ``candidates(sig)`` and cache the winner.
+
+    ``run(config)`` returns a zero-arg callable executing the kernel with
+    that config.  A cached entry short-circuits the benchmark (deterministic
+    round-trips) unless ``force``.
+    """
+    if not force:
+        hit = get_config(sig, path)
+        if hit is not None:
+            return hit
+    import jax
+    best_cfg, best_us = None, float("inf")
+    for cfg in candidates(sig):
+        try:
+            us = _time_us(run(cfg), reps=reps)
+        except Exception:            # a candidate may be invalid for a shape
+            continue
+        if us < best_us:
+            best_cfg, best_us = cfg, us
+    if best_cfg is None:
+        # every candidate failed: cache the heuristic with no timing (null
+        # keeps the JSON strict — NaN is not valid JSON)
+        best_cfg, best_us = heuristic_config(sig), None
+    data = load_cache(path)
+    data["entries"][sig.key()] = {"config": best_cfg,
+                                  "us": None if best_us is None
+                                  else round(best_us, 1),
+                                  "backend": jax.default_backend()}
+    save_cache(data, path)
+    return dict(best_cfg)
+
+
+def tune_layer(sig: LayerSig, *, path: str | None = None, reps: int = 3,
+               force: bool = False) -> dict:
+    """Tune one layer signature end-to-end: builds dummy operands of the
+    signature's shape and benchmarks the matching op wrapper."""
+    import jax
+    import jax.numpy as jnp
+
+    dtype = jnp.dtype(sig.dtype)
+    key = jax.random.PRNGKey(0)
+    kx, kw, kw2, kw3 = jax.random.split(key, 4)
+    x = (jax.random.normal(kx, (1, sig.H, sig.W, sig.C_i)) * 0.3
+         ).astype(dtype)
+
+    if sig.kind == "conv":
+        from repro.kernels.conv_gemm.kernel import conv2d_implicit_gemm
+        w = (jax.random.normal(kw, (sig.K_h, sig.K_w, sig.C_i, sig.C_o))
+             * 0.2).astype(dtype)
+
+        def run(cfg):
+            return lambda: conv2d_implicit_gemm(
+                x, w, stride=sig.stride, pad=sig.pad, **cfg)
+    elif sig.kind == "pointwise":
+        from repro.kernels.conv_gemm.kernel import matmul_bias_act
+        xm = x.reshape(sig.H * sig.W, sig.C_i)
+        w = (jax.random.normal(kw, (sig.C_i, sig.C_o)) * 0.2).astype(dtype)
+
+        def run(cfg):
+            block = tuple(cfg["block"])
+            return lambda: matmul_bias_act(xm, w, block=block)
+    elif sig.kind == "depthwise":
+        from repro.kernels.depthwise.kernel import depthwise_conv2d
+        w = (jax.random.normal(kw, (sig.K_h, sig.K_w, sig.C_i))
+             * 0.3).astype(dtype)
+
+        def run(cfg):
+            return lambda: depthwise_conv2d(
+                x, w, stride=sig.stride, pad=sig.pad, **cfg)
+    elif sig.kind == "fused_dw_pw":
+        from repro.kernels.fused_block.kernel import fused_dw_pw_conv
+        dw_w = (jax.random.normal(kw, (sig.K_h, sig.K_w, sig.C_i))
+                * 0.3).astype(dtype)
+        pw_w = (jax.random.normal(kw2, (sig.C_i, sig.C_o)) * 0.2
+                ).astype(dtype)
+
+        def run(cfg):
+            return lambda: fused_dw_pw_conv(
+                x, dw_w, None, pw_w, None, stride=sig.stride, pad=sig.pad,
+                **cfg)
+    elif sig.kind == "fused_pw_dw_pw":
+        # C_i in the signature is C_mid (the dw channel count, what the
+        # block_c knob tiles); expand input is fixed at C_mid // 6 (the
+        # common t=6 expansion) purely to exercise the expand GEMM.
+        from repro.kernels.fused_block.kernel import fused_pw_dw_pw_conv
+        cm = sig.C_i
+        ci = max(8, cm // 6)
+        x = (jax.random.normal(kx, (1, sig.H, sig.W, ci)) * 0.3
+             ).astype(dtype)
+        exp_w = (jax.random.normal(kw, (ci, cm)) * 0.2).astype(dtype)
+        dw_w = (jax.random.normal(kw2, (sig.K_h, sig.K_w, cm))
+                * 0.3).astype(dtype)
+        proj_w = (jax.random.normal(kw3, (cm, sig.C_o)) * 0.2).astype(dtype)
+
+        def run(cfg):
+            return lambda: fused_pw_dw_pw_conv(
+                x, exp_w, None, dw_w, None, proj_w, None,
+                stride=sig.stride, pad=sig.pad, **cfg)
+    else:
+        raise ValueError(f"tune_layer: unsupported kind {sig.kind!r}")
+    return tune(sig, run, path=path, reps=reps, force=force)

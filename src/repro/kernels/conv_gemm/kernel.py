@@ -1,16 +1,24 @@
-"""c-core analogue: im2col GEMM Pallas kernel with MXU-aligned VMEM tiling.
+"""c-core analogue: implicit-GEMM conv + tiled GEMM Pallas kernels.
 
 The dual-OPU c-core broadcasts one ifm pixel across the PE array and exploits
-input/output channel parallelism — on TPU that is exactly a GEMM over the
-im2col matrix, tiled (block_m x block_k) @ (block_k x block_n) so each step
-feeds the 128x128 MXU from VMEM.  The k-grid dimension accumulates into a
-float32 VMEM scratch accumulator (the overlay's output-buffer partial sums,
-§III-A), with an optional fused bias + ReLU/ReLU6 epilogue (the overlay's
-post-processing unit runs in the same pipeline).
+input/output channel parallelism — on TPU that is a GEMM over conv patches.
+The seed materialized the full im2col patch matrix in HBM (a K_h*K_w x
+activation blow-up) before the GEMM ever ran; ``conv2d_implicit_gemm`` instead
+keeps the NHWC feature map as-is and assembles each (block_m x block_k) patch
+tile *inside the kernel* from a halo tile resident in VMEM, so HBM traffic is
+~1x the ifm (DESIGN.md §1).  ``im2col`` survives only in ref.py as the test
+oracle.
 
-Block shapes default to (128, 128, 128): MXU-native, and 3 * 128*128*4B =
-192 KiB of VMEM per step — well inside the ~16 MiB/core budget while leaving
-room for double buffering.
+Grid: (N, C_o tiles, H_out tiles), with the H_out tiles innermost so the
+image block (index map independent of the inner dims) stays VMEM-resident
+across a whole output-channel pass.  Each step runs K_h*K_w MXU dots of
+(block_h*W_out, C_i) @ (C_i, block_n) accumulated in a float32 VMEM scratch
+(the overlay's output-buffer partial sums, §III-A), then a fused
+bias + ReLU/ReLU6 epilogue (the overlay's post-processing unit).
+
+``matmul_bias_act`` is the plain tiled GEMM used by the 1x1 (pointwise / fc)
+fast path, where im2col is the identity.  Block shapes default to
+(128, 128, 128): MXU-native, 3 * 128*128*4B = 192 KiB of VMEM per step.
 """
 from __future__ import annotations
 
@@ -21,13 +29,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.util import (apply_act, cdiv, pad_axis, pad_to,
+                                resolve_interpret)
+
 
 DEFAULT_BLOCK = (128, 128, 128)  # (block_m, block_n, block_k)
 
 
-def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int,
-                   fuse_bias: bool, act: str | None):
-    """One (i, j, k) grid step: acc[i,j] += x[i,k] @ w[k,j]."""
+def _apply_epilogue(out, b_ref, act: str | None):
+    if b_ref is not None:
+        out = out + b_ref[...].astype(jnp.float32)
+    return apply_act(out, act)
+
+
+# --------------------------------------------------------------------------
+# tiled GEMM (the 1x1 / fc fast path, and the building block of the tests)
+# --------------------------------------------------------------------------
+def _matmul_kernel(x_ref, w_ref, *rest, nk: int, fuse_bias: bool,
+                   act: str | None):
+    """One (i, j, k) grid step: acc[i,j] += x[i,k] @ w[k,j].
+
+    The bias operand only exists when ``fuse_bias`` — no zeros block is
+    allocated or streamed for bias-less GEMMs.
+    """
+    if fuse_bias:
+        b_ref, o_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), b_ref = rest, None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -37,61 +66,151 @@ def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int,
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _epilogue():
-        out = acc_ref[...]
-        if fuse_bias:
-            out = out + b_ref[...].astype(jnp.float32)
-        if act == "relu":
-            out = jnp.maximum(out, 0.0)
-        elif act == "relu6":
-            out = jnp.clip(out, 0.0, 6.0)
-        o_ref[...] = out.astype(o_ref.dtype)
-
-
-def _pad_to(x: jax.Array, mult: tuple[int, ...]) -> jax.Array:
-    pads = [(0, -s % m) for s, m in zip(x.shape, mult)]
-    if any(p[1] for p in pads):
-        x = jnp.pad(x, pads)
-    return x
+        o_ref[...] = _apply_epilogue(acc_ref[...], b_ref,
+                                     act).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "act", "interpret"))
 def matmul_bias_act(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
                     *, block: tuple[int, int, int] = DEFAULT_BLOCK,
                     act: str | None = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """(M, K) @ (K, N) + bias with fused activation, Pallas-tiled.
 
     Shapes are padded up to the block grid; the result is sliced back.
-    ``interpret=True`` runs the kernel body on CPU (this container); on a
-    real TPU pass ``interpret=False``.
+    ``interpret=None`` auto-detects: interpret on CPU, compiled on TPU.
     """
+    interpret = resolve_interpret(interpret)
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
     bm = min(block[0], max(M, 8))
     bn = min(block[1], max(N, 8))
     bk = min(block[2], max(K, 8))
-    xp = _pad_to(x, (bm, bk))
-    wp = _pad_to(w, (bk, bn))
+    xp = pad_to(x, (bm, bk))
+    wp = pad_to(w, (bk, bn))
     fuse_bias = bias is not None
-    b = bias if fuse_bias else jnp.zeros((N,), x.dtype)
-    bp = _pad_to(b.reshape(1, N), (1, bn))
     Mp, Kp = xp.shape
     _, Np = wp.shape
     nk = Kp // bk
     grid = (Mp // bm, Np // bn, nk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [xp, wp]
+    if fuse_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(pad_to(bias.reshape(1, N), (1, bn)))
     out = pl.pallas_call(
         functools.partial(_matmul_kernel, nk=nk, fuse_bias=fuse_bias,
                           act=act),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(xp, wp, bp)
+    )(*operands)
     return out[:M, :N]
+
+
+# --------------------------------------------------------------------------
+# implicit-GEMM conv (K > 1): no HBM patch matrix, ever
+# --------------------------------------------------------------------------
+def _implicit_gemm_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
+                          bh: int, wo: int, fuse_bias: bool, act: str | None):
+    """One (n, co, ht) grid step of the implicit GEMM.
+
+    x_ref:   (1, Hp, Wp, C)  — the whole padded image, VMEM-resident (its
+             index map ignores co/ht, so Pallas keeps it loaded across the
+             inner grid dims: HBM traffic ~1x the ifm).
+    w_ref:   (kh, kw, C, bn)
+    b_ref:   (1, bn) — only present when ``fuse_bias``
+    o_ref:   (1, bh, wo, bn)
+    acc_ref: (bh*wo, bn) float32 VMEM scratch accumulator.
+
+    The (bh*wo, C) patch tile for each window tap is gathered from the halo
+    tile with strided VMEM slices — the in-kernel im2col — and fed straight
+    to the MXU.
+    """
+    if fuse_bias:
+        b_ref, o_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), b_ref = rest, None
+    ht = pl.program_id(2)
+    x = x_ref[0]                       # (Hp, Wp, C)
+    _, wp_, c = x.shape
+    span_h = (bh - 1) * stride + kh
+    # halo rows for this output-row block (dynamic start, static size)
+    xs = jax.lax.dynamic_slice(x, (ht * bh * stride, 0, 0),
+                               (span_h, wp_, c))
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for i in range(kh):                # unrolled window taps: each gathers a
+        for j in range(kw):            # patch tile from the same VMEM halo
+            tap = jax.lax.slice(
+                xs, (i, j, 0),
+                (i + (bh - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (stride, stride, 1))   # (bh, wo, c)
+            acc_ref[...] += jnp.dot(tap.reshape(bh * wo, c),
+                                    w_ref[i, j],
+                                    preferred_element_type=jnp.float32)
+    out = _apply_epilogue(acc_ref[...], b_ref, act)
+    o_ref[0] = out.reshape(bh, wo, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "act",
+                                             "block_h", "block_n",
+                                             "interpret"))
+def conv2d_implicit_gemm(x: jax.Array, w: jax.Array,
+                         bias: jax.Array | None = None, *, stride: int = 1,
+                         pad: int = 0, act: str | None = None,
+                         block_h: int = 0, block_n: int = 128,
+                         interpret: bool | None = None) -> jax.Array:
+    """NHWC conv as implicit GEMM: patch tiles assembled in VMEM, no
+    (N*Ho*Wo, Kh*Kw*C) intermediate in HBM.
+
+    x: (N, H, W, C_i); w: (K_h, K_w, C_i, C_o); bias: (C_o,) or None.
+    ``block_h`` output rows per grid step (0 = auto: aim for a ~256-row
+    GEMM M-tile); ``block_n`` output-channel tile.
+    """
+    interpret = resolve_interpret(interpret)
+    n, h, wd, ci = x.shape
+    kh, kw, ci2, co = w.shape
+    assert ci == ci2, (x.shape, w.shape)
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wd + 2 * pad - kw) // stride + 1
+    bh = block_h if block_h > 0 else max(1, min(ho, cdiv(256, wo)))
+    bh = min(bh, ho)
+    bn = min(block_n, max(co, 8))
+    n_ht = cdiv(ho, bh)
+    # spatial padding: conv pad plus extra bottom rows so the last h-tile's
+    # halo slice stays in bounds ((n_ht*bh - 1)*stride + kh rows needed)
+    need_h = (n_ht * bh - 1) * stride + kh
+    extra_h = max(0, need_h - (h + 2 * pad))
+    xp = jnp.pad(x, ((0, 0), (pad, pad + extra_h), (pad, pad), (0, 0)))
+    wp = pad_axis(w, 3, bn)
+    cop = wp.shape[3]
+    fuse_bias = bias is not None
+    hp, wp_ = xp.shape[1], xp.shape[2]
+    grid = (n, cop // bn, n_ht)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp_, ci), lambda i, j, t: (i, 0, 0, 0)),
+        pl.BlockSpec((kh, kw, ci, bn), lambda i, j, t: (0, 0, 0, j)),
+    ]
+    operands = [xp, wp]
+    if fuse_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, t: (0, j)))
+        operands.append(pad_to(bias.reshape(1, co), (1, bn)))
+    out = pl.pallas_call(
+        functools.partial(_implicit_gemm_kernel, kh=kh, kw=kw, stride=stride,
+                          bh=bh, wo=wo, fuse_bias=fuse_bias, act=act),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bh, wo, bn),
+                               lambda i, j, t: (i, t, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n_ht * bh, wo, cop), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh * wo, bn), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[:, :ho, :, :co]

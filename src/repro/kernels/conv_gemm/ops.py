@@ -1,41 +1,66 @@
-"""jit'd wrapper: 2D convolution as im2col + Pallas GEMM (c-core analogue)."""
+"""Dispatch wrapper: 2D convolution via implicit GEMM (c-core analogue).
+
+No im2col materialization anywhere on this path: 1x1 convs flatten pixels
+(im2col is the identity) and run the tiled GEMM; K>1 convs run the
+implicit-GEMM kernel whose patch tiles are gathered in VMEM (DESIGN.md §1).
+Block shapes come from the autotune cache when a tuned entry exists for the
+layer signature, else from the per-kind heuristic.
+"""
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.conv_gemm.kernel import DEFAULT_BLOCK, matmul_bias_act
-from repro.kernels.conv_gemm.ref import im2col
+from repro.kernels import autotune
+from repro.kernels.conv_gemm.kernel import (DEFAULT_BLOCK,
+                                            conv2d_implicit_gemm,
+                                            matmul_bias_act)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("stride", "pad", "act", "block",
-                                    "interpret"))
+def _sig(kind: str, x: jax.Array, kh: int, kw: int, ci: int, co: int,
+         stride: int, pad: int) -> autotune.LayerSig:
+    return autotune.LayerSig(kind=kind, H=x.shape[1], W=x.shape[2],
+                             C_i=ci, C_o=co, K_h=kh, K_w=kw, stride=stride,
+                             pad=pad, dtype=str(x.dtype))
+
+
 def conv2d_gemm(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
                 *, stride: int = 1, pad: int = 0, act: str | None = None,
-                block=DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
-    """NHWC conv: im2col then the tiled GEMM kernel with fused epilogue.
+                block=None, interpret: bool | None = None) -> jax.Array:
+    """NHWC conv with fused bias/activation epilogue.
 
     x: (N, H, W, C_i); w: (K_h, K_w, C_i, C_o); bias: (C_o,) or None.
+    ``block``: optional explicit (block_h, block_n) override for the
+    implicit-GEMM path (autotuned / heuristic when None).
     """
     kh, kw, ci, co = w.shape
-    patches, (n, ho, wo) = im2col(x, kh, kw, stride, pad)
-    wm = w.reshape(kh * kw * ci, co)
-    out = matmul_bias_act(patches, wm, bias, block=block, act=act,
-                          interpret=interpret)
-    return out.reshape(n, ho, wo, co)
+    if kh == 1 and kw == 1 and stride == 1 and pad == 0:
+        return pointwise_conv(x, w.reshape(ci, co), bias, act=act,
+                              interpret=interpret)
+    if block is not None:
+        bh, bn = block
+    else:
+        sig = _sig("conv", x, kh, kw, ci, co, stride, pad)
+        cfg = autotune.get_config(sig) or autotune.heuristic_config(sig)
+        bh, bn = cfg["block_h"], cfg["block_n"]
+    return conv2d_implicit_gemm(x, w, bias, stride=stride, pad=pad, act=act,
+                                block_h=bh, block_n=bn, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("act", "block", "interpret"))
 def pointwise_conv(x: jax.Array, w: jax.Array,
                    bias: jax.Array | None = None, *, act: str | None = None,
-                   block=DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
-    """1x1 conv fast path: pure GEMM over flattened pixels."""
+                   block=None, interpret: bool | None = None) -> jax.Array:
+    """1x1 conv fast path: pure GEMM over flattened pixels.
+
+    Accepts w as (C_i, C_o) or (1, 1, C_i, C_o).
+    """
     n, h, wd, ci = x.shape
+    if w.ndim == 4:
+        w = w.reshape(w.shape[2], w.shape[3])
     co = w.shape[-1]
-    out = matmul_bias_act(x.reshape(n * h * wd, ci),
-                          w.reshape(ci, co), bias, block=block, act=act,
-                          interpret=interpret)
+    if block is None:
+        sig = _sig("pointwise", x, 1, 1, ci, co, 1, 0)
+        cfg = autotune.get_config(sig)
+        block = tuple(cfg["block"]) if cfg else DEFAULT_BLOCK
+    out = matmul_bias_act(x.reshape(n * h * wd, ci), w, bias, block=block,
+                          act=act, interpret=interpret)
     return out.reshape(n, h, wd, co)

@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for the conv_gemm kernel."""
+"""Pure-jnp oracles for the conv_gemm kernels.
+
+``im2col`` lives here ONLY as the test oracle (and the baseline leg of the
+--smoke benchmark): the execution path never materializes a patch matrix —
+see conv2d_implicit_gemm (DESIGN.md §1)."""
 from __future__ import annotations
 
 import jax

@@ -21,11 +21,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.util import apply_act, pad_axis, resolve_interpret
 
-def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, stride: int,
+
+def _dw_kernel(x_ref, w_ref, *rest, kh: int, kw: int, stride: int,
                fuse_bias: bool, act: str | None):
     """x_ref: (1, Hp, Wp, bc) padded halo tile; w_ref: (kh, kw, bc);
-    o_ref: (1, Ho, Wo, bc)."""
+    o_ref: (1, Ho, Wo, bc).  The bias operand only exists when
+    ``fuse_bias`` — no zeros block is streamed for bias-less convs."""
+    if fuse_bias:
+        b_ref, o_ref = rest
+    else:
+        (o_ref,), b_ref = rest, None
     _, ho, wo, bc = o_ref.shape
     x = x_ref[0]
     acc = jnp.zeros((ho, wo, bc), jnp.float32)
@@ -39,11 +46,7 @@ def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, stride: int,
                 jnp.float32)
     if fuse_bias:
         acc = acc + b_ref[...].astype(jnp.float32)
-    if act == "relu":
-        acc = jnp.maximum(acc, 0.0)
-    elif act == "relu6":
-        acc = jnp.clip(acc, 0.0, 6.0)
-    o_ref[0] = acc.astype(o_ref.dtype)
+    o_ref[0] = apply_act(acc, act).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "pad", "act",
@@ -51,35 +54,39 @@ def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, stride: int,
 def depthwise_conv2d(x: jax.Array, w: jax.Array,
                      bias: jax.Array | None = None, *, stride: int = 1,
                      pad: int = 1, act: str | None = None,
-                     block_c: int = 64, interpret: bool = True) -> jax.Array:
+                     block_c: int = 64,
+                     interpret: bool | None = None) -> jax.Array:
     """NHWC depthwise conv.  x: (N,H,W,C); w: (K_h,K_w,C); bias: (C,)."""
+    interpret = resolve_interpret(interpret)
     n, h, wd, c = x.shape
     kh, kw, cw = w.shape
     assert cw == c, (w.shape, c)
     bc = min(block_c, c)
     # pad channels to a block multiple, spatial by the conv padding
-    cpad = -c % bc
-    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, cpad)))
-    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cpad)))
+    xp = pad_axis(jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))),
+                  3, bc)
+    wp = pad_axis(w, 2, bc)
     fuse_bias = bias is not None
-    b = bias if fuse_bias else jnp.zeros((c,), x.dtype)
-    bp = jnp.pad(b, (0, cpad))
-    cp = c + cpad
+    cp = xp.shape[3]
     hp, wp_ = h + 2 * pad, wd + 2 * pad
     ho = (h + 2 * pad - kh) // stride + 1
     wo = (wd + 2 * pad - kw) // stride + 1
     grid = (n, cp // bc)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp_, bc), lambda i, j: (i, 0, 0, j)),
+        pl.BlockSpec((kh, kw, bc), lambda i, j: (0, 0, j)),
+    ]
+    operands = [xp, wp]
+    if fuse_bias:
+        in_specs.append(pl.BlockSpec((bc,), lambda i, j: (j,)))
+        operands.append(pad_axis(bias, 0, bc))
     out = pl.pallas_call(
         functools.partial(_dw_kernel, kh=kh, kw=kw, stride=stride,
                           fuse_bias=fuse_bias, act=act),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, hp, wp_, bc), lambda i, j: (i, 0, 0, j)),
-            pl.BlockSpec((kh, kw, bc), lambda i, j: (0, 0, j)),
-            pl.BlockSpec((bc,), lambda i, j: (j,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, cp), x.dtype),
         interpret=interpret,
-    )(xp, wp, bp)
+    )(*operands)
     return out[..., :c]

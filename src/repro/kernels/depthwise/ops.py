@@ -1,10 +1,10 @@
-"""jit'd wrapper for the depthwise kernel with VMEM-aware channel blocking."""
+"""Dispatch wrapper for the depthwise kernel with VMEM-aware channel
+blocking (autotuned per layer signature when a cache entry exists)."""
 from __future__ import annotations
-
-import functools
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.depthwise.kernel import depthwise_conv2d
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a v5e core's VMEM for x-tile
@@ -21,13 +21,17 @@ def pick_block_c(h: int, w: int, c: int, kh: int, kw: int,
     return max(8, bc - bc % 8) if bc >= 8 else max(1, bc)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad", "act",
-                                             "interpret"))
 def depthwise(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
               *, stride: int = 1, pad: int = 1, act: str | None = None,
-              interpret: bool = True) -> jax.Array:
+              block_c: int | None = None,
+              interpret: bool | None = None) -> jax.Array:
     n, h, wd, c = x.shape
     kh, kw, _ = w.shape
-    bc = pick_block_c(h, wd, c, kh, kw)
+    if block_c is None:
+        sig = autotune.LayerSig(kind="depthwise", H=h, W=wd, C_i=c, C_o=c,
+                                K_h=kh, K_w=kw, stride=stride, pad=pad,
+                                dtype=str(x.dtype))
+        cfg = autotune.get_config(sig)
+        block_c = cfg["block_c"] if cfg else pick_block_c(h, wd, c, kh, kw)
     return depthwise_conv2d(x, w, bias, stride=stride, pad=pad, act=act,
-                            block_c=bc, interpret=interpret)
+                            block_c=min(block_c, c), interpret=interpret)

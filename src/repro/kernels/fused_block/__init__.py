@@ -1,0 +1,7 @@
+"""Fused MobileNet-block kernels: dw(3x3) -> pw(1x1) (and pw-expand ->
+dw -> pw-project) in a single pallas_call — the software analogue of the
+dual-OPU's concurrent c-/p-core execution (DESIGN.md §3)."""
+from repro.kernels.fused_block.ops import (fused_dw_pw,
+                                           fused_inverted_residual)
+
+__all__ = ["fused_dw_pw", "fused_inverted_residual"]

@@ -1,0 +1,291 @@
+"""Fused depthwise->pointwise Pallas kernels (DESIGN.md §3).
+
+The paper's dual-OPU overlaps a communication-bound depthwise layer on the
+p-core with the compute-bound pointwise layers on the c-core, keeping the
+intermediate feature map on-chip.  The seed's software analogue did the
+opposite: ``models/cnn.py`` round-tripped every activation through HBM
+between the depthwise and pointwise kernels of a MobileNet block.  These
+kernels run the whole block in ONE pallas_call per (image, C_out-tile):
+
+  fused_dw_pw_conv      dw(KxK, stride s) -> pw(1x1)
+  fused_pw_dw_pw_conv   pw-expand -> dw(KxK, stride s) -> pw-project
+                        (MobileNet-v2 inverted residual, optional fused
+                        residual add)
+
+The depthwise result never leaves VMEM: at the first C_out tile of each
+image the VPU computes the dw taps channel-block-by-channel-block from the
+halo tile (p-core analogue) into a persistent float32 VMEM scratch; every
+C_out tile then feeds that scratch to an MXU GEMM against its
+pointwise-weight columns (c-core analogue).  The C_out grid dimension is
+innermost, so the scratch survives across tiles and the dw pass runs once
+per image.  HBM sees the block input once and the block output once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import (apply_act as _act, pad_axis, pad_to,
+                                resolve_interpret)
+
+
+def _dw_tile(xc, w_ref, c0, bc, kh, kw, stride, ho, wo):
+    """Depthwise conv of one VMEM channel block: (Hp, Wp, bc) -> f32
+    (ho, wo, bc).  Every tap re-reads the same VMEM tile (line-buffer
+    reuse, DESIGN.md §2)."""
+    acc = jnp.zeros((ho, wo, bc), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            tap = jax.lax.slice(
+                xc, (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, bc),
+                (stride, stride, 1))
+            acc = acc + tap.astype(jnp.float32) * \
+                w_ref[i, j, c0:c0 + bc].astype(jnp.float32)
+    return acc
+
+
+def _fused_dw_pw_kernel(x_ref, dw_w_ref, *rest, kh, kw, stride, bc, nc,
+                        has_dw_b, has_pw_b, has_res, dw_act, pw_act):
+    """Grid step (n, co): x_ref (1,Hp,Wp,Cp); dw_w_ref (kh,kw,Cp);
+    optional dw_b (1,Cp) / pw_b (1,bn) / res (1,ho,wo,bn); pw_w (Cp,bn);
+    o_ref (1,ho,wo,bn); dws_ref (ho*wo, Cp) f32 scratch.
+
+    The depthwise result is computed channel-block-by-channel-block into
+    the persistent VMEM scratch ONCE per image (co is the innermost grid
+    dim, so the scratch survives across the C_out tiles) and every co step
+    feeds it straight to the MXU — it never exists in HBM.
+    """
+    rest = list(rest)
+    dw_b_ref = rest.pop(0) if has_dw_b else None
+    pw_w_ref = rest.pop(0)
+    pw_b_ref = rest.pop(0) if has_pw_b else None
+    res_ref = rest.pop(0) if has_res else None
+    o_ref, dws_ref = rest
+    _, ho, wo, bn = o_ref.shape
+
+    @pl.when(pl.program_id(1) == 0)
+    def _compute_dw():
+        x = x_ref[0]
+        for cblk in range(nc):       # p-core analogue, one channel block
+            c0 = cblk * bc           # of VMEM halo tile at a time
+            xc = x[:, :, c0:c0 + bc]
+            dw = _dw_tile(xc, dw_w_ref, c0, bc, kh, kw, stride, ho, wo)
+            if dw_b_ref is not None:
+                dw = dw + dw_b_ref[0, c0:c0 + bc].astype(jnp.float32)
+            dws_ref[:, c0:c0 + bc] = _act(dw, dw_act).reshape(ho * wo, bc)
+
+    out = jnp.dot(dws_ref[...], pw_w_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if pw_b_ref is not None:
+        out = out + pw_b_ref[...].astype(jnp.float32)
+    out = _act(out, pw_act)
+    out = out.reshape(ho, wo, bn)
+    if res_ref is not None:
+        out = out + res_ref[0].astype(jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "dw_act",
+                                             "pw_act", "block_c", "block_n",
+                                             "interpret"))
+def fused_dw_pw_conv(x: jax.Array, dw_w: jax.Array,
+                     dw_b: jax.Array | None, pw_w: jax.Array,
+                     pw_b: jax.Array | None,
+                     residual: jax.Array | None = None, *, stride: int = 1,
+                     pad: int = 1, dw_act: str | None = "relu6",
+                     pw_act: str | None = None, block_c: int = 64,
+                     block_n: int = 128,
+                     interpret: bool | None = None) -> jax.Array:
+    """dw(KhxKw, stride) -> pw(1x1) in one pallas_call.
+
+    x: (N,H,W,C); dw_w: (Kh,Kw,C); pw_w: (C,Co); biases (C,)/(Co,) or None;
+    residual: (N,Ho,Wo,Co) or None (added after pw_act).
+    """
+    interpret = resolve_interpret(interpret)
+    n, h, wd, c = x.shape
+    kh, kw, cw = dw_w.shape
+    assert cw == c and pw_w.shape[0] == c, (x.shape, dw_w.shape, pw_w.shape)
+    co = pw_w.shape[1]
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wd + 2 * pad - kw) // stride + 1
+    bc = min(block_c, c)
+    bn = min(block_n, max(co, 8))
+    xp = pad_axis(jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))),
+                  3, bc)
+    cp = xp.shape[3]
+    hp, wp_ = xp.shape[1], xp.shape[2]
+    dw_wp = pad_axis(dw_w, 2, bc)
+    pw_wp = pad_to(pad_axis(pw_w, 0, bc), (cp, bn))
+    cop = pw_wp.shape[1]
+    grid = (n, cop // bn)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp_, cp), lambda i, j: (i, 0, 0, 0)),
+        pl.BlockSpec((kh, kw, cp), lambda i, j: (0, 0, 0)),
+    ]
+    operands: list[jax.Array] = [xp, dw_wp]
+    if dw_b is not None:
+        in_specs.append(pl.BlockSpec((1, cp), lambda i, j: (0, 0)))
+        operands.append(pad_to(dw_b.reshape(1, c), (1, cp)))
+    in_specs.append(pl.BlockSpec((cp, bn), lambda i, j: (0, j)))
+    operands.append(pw_wp)
+    if pw_b is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+        operands.append(pad_to(pw_b.reshape(1, co), (1, bn)))
+    if residual is not None:
+        assert residual.shape == (n, ho, wo, co), residual.shape
+        in_specs.append(pl.BlockSpec((1, ho, wo, bn),
+                                     lambda i, j: (i, 0, 0, j)))
+        operands.append(pad_axis(residual, 3, bn))
+    out = pl.pallas_call(
+        functools.partial(_fused_dw_pw_kernel, kh=kh, kw=kw, stride=stride,
+                          bc=bc, nc=cp // bc, has_dw_b=dw_b is not None,
+                          has_pw_b=pw_b is not None,
+                          has_res=residual is not None, dw_act=dw_act,
+                          pw_act=pw_act),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ho, wo, bn), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cop), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho * wo, cp), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[..., :co]
+
+
+def _fused_pw_dw_pw_kernel(x_ref, exp_w_ref, *rest, kh, kw, stride, pad, bc,
+                           nc, has_exp_b, has_dw_b, has_proj_b, has_res,
+                           exp_act, dw_act, proj_act):
+    """Grid step (n, co) of the inverted residual.
+
+    x_ref (1,H,W,Ci); exp_w (Ci,Cmp); optional exp_b (1,Cmp);
+    dw_w (kh,kw,Cmp); optional dw_b (1,Cmp); proj_w (Cmp,bn); optional
+    proj_b (1,bn); optional res (1,ho,wo,bn); o_ref (1,ho,wo,bn);
+    dws_ref (ho*wo,Cmp) f32 — expand+dw result, computed once per image
+    (co innermost) and reused across C_out tiles; eb_ref (Hp,Wp,bc) f32 —
+    the expanded map's halo tile, zero-padded in VMEM.  Neither the
+    expanded map nor the dw result ever exists in HBM.
+    """
+    rest = list(rest)
+    exp_b_ref = rest.pop(0) if has_exp_b else None
+    dw_w_ref = rest.pop(0)
+    dw_b_ref = rest.pop(0) if has_dw_b else None
+    proj_w_ref = rest.pop(0)
+    proj_b_ref = rest.pop(0) if has_proj_b else None
+    res_ref = rest.pop(0) if has_res else None
+    o_ref, dws_ref, eb_ref = rest
+    _, ho, wo, bn = o_ref.shape
+    _, h, wd, ci = x_ref.shape
+
+    @pl.when(pl.program_id(1) == 0)
+    def _compute_expand_dw():
+        xm = x_ref[0].reshape(h * wd, ci)
+        for cblk in range(nc):
+            c0 = cblk * bc
+            # pw-expand for this channel block (MXU), epilogue in f32
+            e = jnp.dot(xm, exp_w_ref[:, c0:c0 + bc],
+                        preferred_element_type=jnp.float32)
+            if exp_b_ref is not None:
+                e = e + exp_b_ref[0, c0:c0 + bc].astype(jnp.float32)
+            e = _act(e, exp_act)
+            # zero-padded halo tile of the expanded map, entirely in VMEM
+            eb_ref[...] = jnp.zeros_like(eb_ref)
+            eb_ref[pad:pad + h, pad:pad + wd, :] = e.reshape(h, wd, bc)
+            dw = _dw_tile(eb_ref[...], dw_w_ref, c0, bc, kh, kw, stride,
+                          ho, wo)
+            if dw_b_ref is not None:
+                dw = dw + dw_b_ref[0, c0:c0 + bc].astype(jnp.float32)
+            dws_ref[:, c0:c0 + bc] = _act(dw, dw_act).reshape(ho * wo, bc)
+
+    out = jnp.dot(dws_ref[...], proj_w_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if proj_b_ref is not None:
+        out = out + proj_b_ref[...].astype(jnp.float32)
+    out = _act(out, proj_act)
+    out = out.reshape(ho, wo, bn)
+    if res_ref is not None:
+        out = out + res_ref[0].astype(jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "exp_act",
+                                             "dw_act", "proj_act", "block_c",
+                                             "block_n", "interpret"))
+def fused_pw_dw_pw_conv(x: jax.Array, exp_w: jax.Array,
+                        exp_b: jax.Array | None, dw_w: jax.Array,
+                        dw_b: jax.Array | None, proj_w: jax.Array,
+                        proj_b: jax.Array | None,
+                        residual: jax.Array | None = None, *,
+                        stride: int = 1, pad: int = 1,
+                        exp_act: str | None = "relu6",
+                        dw_act: str | None = "relu6",
+                        proj_act: str | None = None, block_c: int = 64,
+                        block_n: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """pw-expand -> dw(KhxKw, stride) -> pw-project in one pallas_call
+    (MobileNet-v2 inverted residual; ``residual`` is fused into the
+    epilogue when given).
+
+    x: (N,H,W,Ci); exp_w: (Ci,Cm); dw_w: (Kh,Kw,Cm); proj_w: (Cm,Co).
+    """
+    interpret = resolve_interpret(interpret)
+    n, h, wd, ci = x.shape
+    cm = exp_w.shape[1]
+    kh, kw, cmw = dw_w.shape
+    assert exp_w.shape[0] == ci and cmw == cm and proj_w.shape[0] == cm
+    co = proj_w.shape[1]
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wd + 2 * pad - kw) // stride + 1
+    bc = min(block_c, cm)
+    bn = min(block_n, max(co, 8))
+    exp_wp = pad_axis(exp_w, 1, bc)
+    cmp_ = exp_wp.shape[1]
+    dw_wp = pad_axis(dw_w, 2, bc)
+    proj_wp = pad_to(pad_axis(proj_w, 0, bc), (cmp_, bn))
+    cop = proj_wp.shape[1]
+    hp, wp_ = h + 2 * pad, wd + 2 * pad
+    grid = (n, cop // bn)
+    in_specs = [
+        pl.BlockSpec((1, h, wd, ci), lambda i, j: (i, 0, 0, 0)),
+        pl.BlockSpec((ci, cmp_), lambda i, j: (0, 0)),
+    ]
+    operands: list[jax.Array] = [x, exp_wp]
+    if exp_b is not None:
+        in_specs.append(pl.BlockSpec((1, cmp_), lambda i, j: (0, 0)))
+        operands.append(pad_to(exp_b.reshape(1, cm), (1, cmp_)))
+    in_specs.append(pl.BlockSpec((kh, kw, cmp_), lambda i, j: (0, 0, 0)))
+    operands.append(dw_wp)
+    if dw_b is not None:
+        in_specs.append(pl.BlockSpec((1, cmp_), lambda i, j: (0, 0)))
+        operands.append(pad_to(dw_b.reshape(1, cm), (1, cmp_)))
+    in_specs.append(pl.BlockSpec((cmp_, bn), lambda i, j: (0, j)))
+    operands.append(proj_wp)
+    if proj_b is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+        operands.append(pad_to(proj_b.reshape(1, co), (1, bn)))
+    if residual is not None:
+        assert residual.shape == (n, ho, wo, co), residual.shape
+        in_specs.append(pl.BlockSpec((1, ho, wo, bn),
+                                     lambda i, j: (i, 0, 0, j)))
+        operands.append(pad_axis(residual, 3, bn))
+    out = pl.pallas_call(
+        functools.partial(_fused_pw_dw_pw_kernel, kh=kh, kw=kw,
+                          stride=stride, pad=pad, bc=bc, nc=cmp_ // bc,
+                          has_exp_b=exp_b is not None,
+                          has_dw_b=dw_b is not None,
+                          has_proj_b=proj_b is not None,
+                          has_res=residual is not None, exp_act=exp_act,
+                          dw_act=dw_act, proj_act=proj_act),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ho, wo, bn), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cop), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho * wo, cmp_), jnp.float32),
+                        pltpu.VMEM((hp, wp_, bc), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[..., :co]

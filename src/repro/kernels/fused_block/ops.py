@@ -1,0 +1,68 @@
+"""Dispatch wrappers for the fused MobileNet-block kernels.
+
+Block shapes (channel k-block ``block_c``, output-channel tile ``block_n``)
+come from the autotune cache when a tuned entry exists for the layer
+signature, else from the per-kind heuristic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import autotune
+from repro.kernels.fused_block.kernel import (fused_dw_pw_conv,
+                                              fused_pw_dw_pw_conv)
+
+
+def _cfg(kind: str, x: jax.Array, c_i: int, c_o: int, kh: int, kw: int,
+         stride: int, pad: int, block_c, block_n) -> tuple[int, int]:
+    if block_c is not None and block_n is not None:
+        return block_c, block_n
+    sig = autotune.LayerSig(kind=kind, H=x.shape[1], W=x.shape[2], C_i=c_i,
+                            C_o=c_o, K_h=kh, K_w=kw, stride=stride, pad=pad,
+                            dtype=str(x.dtype))
+    cfg = autotune.get_config(sig) or autotune.heuristic_config(sig)
+    return (block_c or cfg["block_c"], block_n or cfg["block_n"])
+
+
+def fused_dw_pw(x: jax.Array, dw_w: jax.Array, dw_b, pw_w: jax.Array, pw_b,
+                residual=None, *, stride: int = 1, pad: int = 1,
+                dw_act: str | None = "relu6", pw_act: str | None = None,
+                block_c: int | None = None, block_n: int | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """dw(KhxKw) -> pw(1x1) fused block.  pw_w: (C,Co) or (1,1,C,Co)."""
+    if pw_w.ndim == 4:
+        pw_w = pw_w.reshape(pw_w.shape[2], pw_w.shape[3])
+    kh, kw, c = dw_w.shape
+    bc, bn = _cfg("fused_dw_pw", x, c, pw_w.shape[1], kh, kw, stride, pad,
+                  block_c, block_n)
+    return fused_dw_pw_conv(x, dw_w, dw_b, pw_w, pw_b, residual,
+                            stride=stride, pad=pad, dw_act=dw_act,
+                            pw_act=pw_act, block_c=bc, block_n=bn,
+                            interpret=interpret)
+
+
+def fused_inverted_residual(x: jax.Array, exp_w: jax.Array, exp_b,
+                            dw_w: jax.Array, dw_b, proj_w: jax.Array,
+                            proj_b, residual=None, *, stride: int = 1,
+                            pad: int = 1, exp_act: str | None = "relu6",
+                            dw_act: str | None = "relu6",
+                            proj_act: str | None = None,
+                            block_c: int | None = None,
+                            block_n: int | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """pw-expand -> dw -> pw-project fused block (MobileNet-v2 style).
+
+    exp_w: (Ci,Cm) or (1,1,Ci,Cm); proj_w: (Cm,Co) or (1,1,Cm,Co).
+    """
+    if exp_w.ndim == 4:
+        exp_w = exp_w.reshape(exp_w.shape[2], exp_w.shape[3])
+    if proj_w.ndim == 4:
+        proj_w = proj_w.reshape(proj_w.shape[2], proj_w.shape[3])
+    kh, kw, cm = dw_w.shape
+    bc, bn = _cfg("fused_pw_dw_pw", x, cm, proj_w.shape[1], kh, kw, stride,
+                  pad, block_c, block_n)
+    return fused_pw_dw_pw_conv(x, exp_w, exp_b, dw_w, dw_b, proj_w, proj_b,
+                               residual, stride=stride, pad=pad,
+                               exp_act=exp_act, dw_act=dw_act,
+                               proj_act=proj_act, block_c=bc, block_n=bn,
+                               interpret=interpret)

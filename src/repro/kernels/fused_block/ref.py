@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the fused-block kernels: the composed unfused
+reference ops (depthwise then pointwise), exactly what the fused kernels
+must reproduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv_gemm.ref import conv2d_ref
+from repro.kernels.depthwise.ref import depthwise_conv2d_ref
+
+
+def fused_dw_pw_ref(x, dw_w, dw_b, pw_w, pw_b, residual=None, *,
+                    stride=1, pad=1, dw_act="relu6", pw_act=None):
+    h = depthwise_conv2d_ref(x, dw_w, dw_b, stride=stride, pad=pad,
+                             act=dw_act)
+    c, co = pw_w.shape
+    out = conv2d_ref(h, pw_w.reshape(1, 1, c, co), pw_b, stride=1, pad=0,
+                     act=pw_act)
+    if residual is not None:
+        out = out + residual
+    return out
+
+
+def fused_pw_dw_pw_ref(x, exp_w, exp_b, dw_w, dw_b, proj_w, proj_b,
+                       residual=None, *, stride=1, pad=1, exp_act="relu6",
+                       dw_act="relu6", proj_act=None):
+    ci, cm = exp_w.shape
+    h = conv2d_ref(x, exp_w.reshape(1, 1, ci, cm), exp_b, stride=1, pad=0,
+                   act=exp_act)
+    h = depthwise_conv2d_ref(h, dw_w, dw_b, stride=stride, pad=pad,
+                             act=dw_act)
+    co = proj_w.shape[1]
+    out = conv2d_ref(h, proj_w.reshape(1, 1, cm, co), proj_b, stride=1,
+                     pad=0, act=proj_act)
+    if residual is not None:
+        out = out + residual
+    return out

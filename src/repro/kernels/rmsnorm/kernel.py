@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.util import resolve_interpret
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -24,8 +26,10 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows",
                                              "interpret"))
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
-            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+            block_rows: int = 256,
+            interpret: bool | None = None) -> jax.Array:
     """x: (..., d); w: (d,)."""
+    interpret = resolve_interpret(interpret)
     shape = x.shape
     d = shape[-1]
     rows = 1

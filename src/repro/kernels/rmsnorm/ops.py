@@ -12,7 +12,8 @@ from repro.kernels.rmsnorm.ref import rmsnorm_ref
 @functools.partial(jax.jit, static_argnames=("eps", "use_pallas",
                                              "interpret"))
 def rms_norm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
-             use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+             use_pallas: bool = False,
+             interpret: bool | None = None) -> jax.Array:
     if use_pallas:
         return rmsnorm(x, w, eps=eps, interpret=interpret)
     return rmsnorm_ref(x, w, eps)

@@ -1,0 +1,78 @@
+"""Shared helpers for the Pallas kernel packages.
+
+Every kernel wrapper needs the same three things: ceil-division for grids,
+zero-padding up to block multiples (so BlockSpec grids divide evenly), and a
+backend-aware default for Pallas ``interpret`` mode — interpret on CPU (this
+container / CI), compiled on a real TPU.  They live here so conv_gemm /
+depthwise / fused_block / attention / rmsnorm stay in sync (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division (grid sizing)."""
+    return -(-a // b)
+
+
+def pad_to(x: jax.Array, mult: tuple[int, ...]) -> jax.Array:
+    """Zero-pad each leading axis of ``x`` up to a multiple of ``mult[i]``.
+
+    ``mult`` may be shorter than ``x.ndim``; trailing axes are left alone.
+    """
+    pads = [(0, -s % m) for s, m in zip(x.shape, mult)]
+    pads += [(0, 0)] * (x.ndim - len(pads))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad a single axis of ``x`` up to a multiple of ``mult``."""
+    extra = -x.shape[axis] % mult
+    if not extra:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, extra)
+    return jnp.pad(x, pads)
+
+
+def apply_act(x: jax.Array, act: str | None) -> jax.Array:
+    """The shared fused-epilogue activation (None | 'relu' | 'relu6')."""
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    return x
+
+
+def bench_best_us(fn, reps: int = 3) -> float:
+    """Best-of-``reps`` wall-clock of ``fn`` in microseconds, after one
+    warm-up call (compile).  The one timing rule shared by the autotuner
+    and the --smoke benchmark, so both rank kernels identically."""
+    import time
+    jax.block_until_ready(fn())            # compile / warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpret elsewhere.
+
+    All kernel wrappers take ``interpret: bool | None = None`` and resolve
+    ``None`` through here, so a real-TPU run is fast by default while the
+    CPU CI keeps validating the kernel bodies in interpret mode.  These
+    kernels use TPU-specific scratch/memory spaces (pltpu.*), so any
+    non-TPU backend (CPU *or* GPU) must interpret.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)

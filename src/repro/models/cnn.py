@@ -7,22 +7,29 @@ execution, the dual-OPU scheduler and the latency model can never diverge
 
 Execution paths per layer:
   * XLA (default): jax.lax convolutions — this is what the dry-run lowers.
-  * Pallas (use_pallas=True): conv_gemm / depthwise kernels in interpret
-    mode on CPU, the c-core / p-core analogues.
+  * Pallas (use_pallas=True): the fusion pass (repro.core.fusion) groups
+    dw->pw / pw-expand->dw->pw-project chains and runs each group as ONE
+    fused_block pallas_call — the intermediate feature maps stay in VMEM,
+    the software analogue of the dual-OPU's concurrent c-/p-core execution
+    (DESIGN.md §3).  Unmatched layers fall back to the implicit-GEMM /
+    depthwise kernels.  ``fuse=False`` forces the per-layer kernels (the
+    unfused baseline the benchmarks compare against).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.fusion import plan_fusion
 from repro.core.graph import LayerGraph, LayerSpec
 from repro.kernels.conv_gemm.ops import conv2d_gemm
 from repro.kernels.conv_gemm.ref import conv2d_ref
 from repro.kernels.depthwise.ops import depthwise
 from repro.kernels.depthwise.ref import depthwise_conv2d_ref
+from repro.kernels.fused_block.ops import (fused_dw_pw,
+                                           fused_inverted_residual)
 from repro.models.zoo import get_graph
 
 Params = dict[str, dict[str, jax.Array]]
@@ -64,6 +71,55 @@ def _avgpool_all(x):
     return jnp.mean(x, axis=(1, 2), keepdims=True)
 
 
+def _mbv1_act(name: str) -> str | None:
+    return None if name == "fc" else "relu6"
+
+
+def _mbv2_act(name: str) -> str | None:
+    if name in ("fc",) or name.endswith("_project"):
+        return None                 # linear bottleneck / classifier head
+    return "relu6"
+
+
+def _forward_fused_chain(g: LayerGraph, params: Params, x: jax.Array,
+                         act_of: Callable[[str], str | None],
+                         collect: dict | None) -> jax.Array:
+    """Pallas path for the (almost) sequential nets: run the fusion plan,
+    one fused_block pallas_call per dw->pw / pw->dw->pw group.
+
+    ``collect`` only records feature maps that actually materialize in HBM
+    (the fused groups' outputs) — the whole point of fusion is that the
+    intermediates never exist.
+    """
+    h = x
+    for grp in plan_fusion(g):
+        first = g.layer(grp.layers[0])
+        last = g.layer(grp.layers[-1])
+        if first.op == "fc" and "avgpool" in first.fused:
+            h = _avgpool_all(h)
+        if grp.kind == "dw_pw":
+            d, p = (g.layer(nm) for nm in grp.layers)
+            pd, pp = params[d.name], params[p.name]
+            h = fused_dw_pw(h, pd["w"], pd["b"], pp["w"], pp["b"],
+                            stride=d.stride, pad=d.pad,
+                            dw_act=act_of(d.name), pw_act=act_of(p.name))
+        elif grp.kind == "pw_dw_pw":
+            e, d, p = (g.layer(nm) for nm in grp.layers)
+            res = h if ("add" in p.fused and d.stride == 1
+                        and e.C_i == p.C_o) else None
+            pe, pd, pp = params[e.name], params[d.name], params[p.name]
+            h = fused_inverted_residual(
+                h, pe["w"], pe["b"], pd["w"], pd["b"], pp["w"], pp["b"],
+                res, stride=d.stride, pad=d.pad, exp_act=act_of(e.name),
+                dw_act=act_of(d.name), proj_act=act_of(p.name))
+        else:
+            h = _run_layer(first, h, params[first.name], act_of(first.name),
+                           use_pallas=True)
+        if collect is not None:
+            collect[last.name] = h.shape
+    return h.reshape(h.shape[0], -1)
+
+
 def _maxpool(x, window=3, stride=2):
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max, (1, window, window, 1),
@@ -75,8 +131,11 @@ def _maxpool(x, window=3, stride=2):
 # --------------------------------------------------------------------------
 def mobilenet_v1_forward(params: Params, x: jax.Array,
                          use_pallas: bool = False,
-                         collect: dict | None = None) -> jax.Array:
+                         collect: dict | None = None,
+                         fuse: bool = True) -> jax.Array:
     g = get_graph("mobilenet_v1")
+    if use_pallas and fuse:
+        return _forward_fused_chain(g, params, x, _mbv1_act, collect)
     h = x
     for l in g.layers[:-1]:
         h = _run_layer(l, h, params[l.name], "relu6", use_pallas)
@@ -95,8 +154,11 @@ def mobilenet_v1_forward(params: Params, x: jax.Array,
 # --------------------------------------------------------------------------
 def mobilenet_v2_forward(params: Params, x: jax.Array,
                          use_pallas: bool = False,
-                         collect: dict | None = None) -> jax.Array:
+                         collect: dict | None = None,
+                         fuse: bool = True) -> jax.Array:
     g = get_graph("mobilenet_v2")
+    if use_pallas and fuse:
+        return _forward_fused_chain(g, params, x, _mbv2_act, collect)
     h = x
     residual: jax.Array | None = None
     for l in g.layers:
@@ -131,7 +193,10 @@ def mobilenet_v2_forward(params: Params, x: jax.Array,
 # --------------------------------------------------------------------------
 def squeezenet_forward(params: Params, x: jax.Array,
                        use_pallas: bool = False,
-                       collect: dict | None = None) -> jax.Array:
+                       collect: dict | None = None,
+                       fuse: bool = True) -> jax.Array:
+    # no dwconv layers -> the fusion plan is all singletons; the per-layer
+    # kernels are already the fastest Pallas path here
     g = get_graph("squeezenet")
     l = g.layer("conv1")
     h = _run_layer(l, x, params["conv1"], "relu", use_pallas)

@@ -87,3 +87,14 @@ try:
     import hypothesis  # noqa: F401  (real package wins when installed)
 except ImportError:
     _install_hypothesis_fallback()
+
+
+# Keep test runs hermetic: never read (or write) the developer's autotune
+# cache — block shapes must come from the deterministic heuristics unless a
+# test tunes into its own tmp_path explicitly.  Hard assignment on purpose:
+# an exported REPRO_AUTOTUNE_CACHE must not leak into the suite either.
+import os
+import tempfile
+
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro_autotune_test_"), "autotune.json")

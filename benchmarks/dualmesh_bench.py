@@ -13,8 +13,7 @@ from __future__ import annotations
 
 from repro.configs.registry import get_arch, get_smoke
 from repro.dualmesh import (ALLOCATIONS, TpuModel, best_schedule, build,
-                            load_balance, plan_admission, request_stages,
-                            search)
+                            plan_admission, request_stages, search)
 from repro.dualmesh.partition import abstract_split
 from repro.dualmesh.schedule import stage_cost
 

@@ -9,9 +9,9 @@ import statistics
 
 from repro.core import (ALLOCATION_SCHEMES, BoardModel, CoreConfig,
                         DualCoreConfig, P128_9, DUAL_BASELINE, DUAL_MBV1,
-                        DUAL_MBV2, DUAL_SQZ, DUAL_MULTI, ResourceBudget,
+                        DUAL_MBV2, DUAL_SQZ, DUAL_MULTI,
                         best_schedule, build_schedule, core_area,
-                        dual_core_area, evaluate_config, harmonic_mean,
+                        evaluate_config,
                         pe_structure_lut_equiv, search,
                         simulate_single_core, graph_latency_report)
 from repro.models.zoo import get_graph

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.arch import ALPHA, CoreConfig, DualCoreConfig, ResourceBudget
+from repro.core.arch import CoreConfig, DualCoreConfig
 
 # Component constants (see module docstring for derivation).
 MULT_LUT_EQUIV = 71.0          # Table III: LUT-equivalent of one 8-bit mult

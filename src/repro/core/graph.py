@@ -8,8 +8,7 @@ JAX model definitions and consumed by tiling / latency / area / scheduling.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Iterable, Sequence
+from typing import Sequence
 
 # Layer op kinds understood by the dual-OPU models.  ``conv`` covers regular and
 # pointwise (K=1) convolution; ``dwconv`` is depthwise; ``fc`` is a 1x1 conv on a

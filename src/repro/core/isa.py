@@ -15,7 +15,7 @@ import dataclasses
 import math
 from typing import Iterable
 
-from repro.core.arch import BoardModel, CoreConfig, DualCoreConfig
+from repro.core.arch import BoardModel, CoreConfig
 from repro.core.graph import LayerSpec
 from repro.core.latency import compute_cycles, load_cycles
 from repro.core.scheduler import Schedule

@@ -15,10 +15,8 @@ Pipeline:
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import math
 
-from repro.core.arch import BoardModel, CoreConfig, DualCoreConfig
+from repro.core.arch import BoardModel, DualCoreConfig
 from repro.core.graph import LayerGraph, LayerSpec
 from repro.core.latency import layer_latency
 
@@ -145,7 +143,13 @@ def partition(graph: LayerGraph, assignment: list[str]) -> list[Group]:
 
 def build_schedule(graph: LayerGraph, cfg: DualCoreConfig, board: BoardModel,
                    scheme: str) -> Schedule:
-    groups = partition(graph, allocate(graph, cfg, board, scheme))
+    """One schedule under a named scheme: the paper's three allocation
+    schemes, or the beyond-paper ``"balanced"`` pack-to-target partitioner
+    (see ``balanced_partition``)."""
+    if scheme == "balanced":
+        groups = balanced_partition(graph, cfg, board)
+    else:
+        groups = partition(graph, allocate(graph, cfg, board, scheme))
     return Schedule(groups=groups, cfg=cfg, board=board, scheme=scheme)
 
 
@@ -288,20 +292,18 @@ def balanced_partition(graph: LayerGraph, cfg: DualCoreConfig,
     total_c = sum(lat[("c", l.name)] for l in layers)
     best_groups, best_span = None, None
     for start in ("c", "p"):
+        # geometric tau decay from the total work toward the largest layer:
+        # each probe halves the gap to lo (more, smaller groups every
+        # step); keep the best makespan seen across all probes
         lo, hi = max(lat.values()) * 0.5, float(total_c)
-        for _ in range(18):               # binary search on tau
+        for _ in range(18):
             tau = 0.5 * (lo + hi)
             groups = pack(tau, start)
             s = Schedule(groups, cfg, board, scheme="balanced")
             span = s.t_b2()
             if best_span is None or span < best_span:
                 best_span, best_groups = span, groups
-            if len(groups) <= 2:
-                hi = tau
-            else:
-                # shrink tau to create more, smaller groups; stop when the
-                # makespan stops improving
-                hi = tau
+            hi = tau
         # coarse sweep of tau around work/slots as a second probe
         for k in range(2, min(2 * len(layers), 64)):
             tau = total_c / k

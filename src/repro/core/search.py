@@ -13,15 +13,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Sequence
+from typing import Sequence
 
 from repro.core.arch import (ALPHA, V_CANDIDATES, BoardModel, CoreConfig,
                              DualCoreConfig, ResourceBudget)
 from repro.core.area import dual_core_area
 from repro.core.graph import LayerGraph
 from repro.core.latency import compute_lower_bound, load_cycles
-from repro.core.scheduler import (ALLOCATION_SCHEMES, best_schedule,
-                                  build_schedule)
+from repro.core.scheduler import ALLOCATION_SCHEMES, best_schedule
 
 
 @dataclasses.dataclass

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.arch import BoardModel, CoreConfig, DualCoreConfig
+from repro.core.arch import BoardModel, CoreConfig
 from repro.core.graph import LayerGraph
 from repro.core.isa import Instr, compile_group, compile_schedule
 from repro.core.scheduler import Schedule

@@ -1,0 +1,19 @@
+"""Dual-core CNN execution: step programs + the pipelined c/p-submesh
+runtime that turns a scheduler ``Schedule`` into real overlapped execution
+(the missing half of the paper's Fig.4b)."""
+from repro.dualcore.program import (ACT_OF, Program, Step, build_program,
+                                    run_layer)
+from repro.dualcore.runtime import (DualCoreRunner, ExecGroup, ExecPlan,
+                                    build_exec_plan)
+
+__all__ = [
+    "ACT_OF",
+    "Program",
+    "Step",
+    "build_program",
+    "run_layer",
+    "DualCoreRunner",
+    "ExecGroup",
+    "ExecPlan",
+    "build_exec_plan",
+]

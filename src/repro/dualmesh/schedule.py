@@ -41,8 +41,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.dualmesh.cost import StageCost, TpuModel, decode_cost, \
-    prefill_cost
+from repro.dualmesh.cost import TpuModel, decode_cost, prefill_cost
 from repro.dualmesh.partition import DualMesh
 from repro.lm.config import ArchConfig
 

@@ -9,11 +9,10 @@ ignoring scheduling structure), then local-search the discrete knobs
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
-from repro.dualmesh.cost import TpuModel, decode_cost, prefill_cost
-from repro.dualmesh.partition import DualMesh, split_mesh, theta_candidates
+from repro.dualmesh.cost import TpuModel
+from repro.dualmesh.partition import DualMesh, split_mesh
 from repro.dualmesh.schedule import Stage, best_schedule, stage_cost
 from repro.lm.config import ArchConfig
 

@@ -3,9 +3,6 @@ reference ops (depthwise then pointwise), exactly what the fused kernels
 must reproduce."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.conv_gemm.ref import conv2d_ref
 from repro.kernels.depthwise.ref import depthwise_conv2d_ref
 

@@ -22,10 +22,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 #   benches see 1 device.
 
 import argparse
-import dataclasses
 import json
 import math
-import re
 import sys
 import time
 
@@ -33,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.registry import ARCH_IDS, LONG_OK, SHAPES, cells, get_arch
+from repro.configs.registry import ARCH_IDS, SHAPES, cells, get_arch
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (batch_spec, cache_specs, param_specs,

@@ -15,11 +15,10 @@ recorded in the dry-run output as a fallback, not a failure.
 """
 from __future__ import annotations
 
-import re
-from typing import Any
+
+import dataclasses
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -69,9 +68,6 @@ def batch_axes(mesh: Mesh):
              else ("pod", "data"))
     axes = tuple(a for a in names if a in mesh.axis_names)
     return axes if len(axes) > 1 else (axes[0] if axes else None)
-
-
-import dataclasses
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,6 @@ Decode (``decode_step``) carries an explicit cache pytree:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -21,8 +20,8 @@ import jax.numpy as jnp
 
 from repro.lm.config import ArchConfig
 from repro.lm.modules import (KVCache, attention_scores, cross_attention,
-                              gelu_mlp, gqa_attention, layer_norm, moe_block,
-                              rms_norm, swiglu_mlp)
+                              gqa_attention, moe_block, rms_norm,
+                              swiglu_mlp)
 from repro.lm.pshard import BATCH, MODEL, hint
 from repro.lm.ssm import SSMState, mamba2_block, mamba2_dims, mlstm_block
 

@@ -10,9 +10,8 @@ uniformly (see repro.launch.sharding).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, NamedTuple
+import os
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -87,7 +86,6 @@ class KVCache(NamedTuple):
     v: jax.Array
 
 
-import os
 # Query-block size of the chunked attention — the Eq.2 "input size per PE"
 # analogue on the LM side: bounds score memory at O(Q_CHUNK x Sk).
 # Env-tunable for §Perf sweeps.

@@ -20,7 +20,6 @@ Simplifications recorded in DESIGN.md §7:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

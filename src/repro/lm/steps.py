@@ -9,15 +9,13 @@ the decode_* / long_* dry-run shapes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.lm.config import ArchConfig
-from repro.lm.model import (DecodeCache, decode_step, encode, forward,
-                            init_cache)
+from repro.lm.model import DecodeCache, decode_step, encode, forward
 from repro.train.optimizer import AdamW, AdamWState
 
 

@@ -5,15 +5,20 @@ graph IS the single source of truth for layer characteristics, so the JAX
 execution, the dual-OPU scheduler and the latency model can never diverge
 (a test asserts per-layer activation shapes match the graph).
 
-Execution paths per layer:
-  * XLA (default): jax.lax convolutions — this is what the dry-run lowers.
-  * Pallas (use_pallas=True): the fusion pass (repro.core.fusion) groups
-    dw->pw / pw-expand->dw->pw-project chains and runs each group as ONE
-    fused_block pallas_call — the intermediate feature maps stay in VMEM,
-    the software analogue of the dual-OPU's concurrent c-/p-core execution
-    (DESIGN.md §3).  Unmatched layers fall back to the implicit-GEMM /
-    depthwise kernels.  ``fuse=False`` forces the per-layer kernels (the
-    unfused baseline the benchmarks compare against).
+Execution is expressed once, as a step program (``repro.dualcore.program``),
+and consumed two ways:
+
+  * sequential forward (this module): run the steps in order on one device.
+    ``use_pallas`` selects XLA reference ops vs the Pallas kernels;
+    ``fuse=True`` (Pallas path) runs dw->pw / pw-expand->dw->pw-project
+    chains as single fused_block pallas_calls (DESIGN.md §3); ``fuse=False``
+    forces the per-layer kernels.
+  * pipelined dual-core (``run_pipelined`` -> ``repro.dualcore.runtime``):
+    the same steps partitioned into the alternating c/p-core groups of a
+    scheduler ``Schedule`` and executed on the two submeshes with the
+    paper's one-slot image offset (DESIGN.md §8).
+
+Because both paths execute the same step objects, they agree bitwise.
 """
 from __future__ import annotations
 
@@ -22,15 +27,12 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.fusion import plan_fusion
-from repro.core.graph import LayerGraph, LayerSpec
-from repro.kernels.conv_gemm.ops import conv2d_gemm
-from repro.kernels.conv_gemm.ref import conv2d_ref
-from repro.kernels.depthwise.ops import depthwise
-from repro.kernels.depthwise.ref import depthwise_conv2d_ref
-from repro.kernels.fused_block.ops import (fused_dw_pw,
-                                           fused_inverted_residual)
+from repro.core.graph import LayerGraph
+from repro.dualcore.program import build_program, run_layer as _run_layer
 from repro.models.zoo import get_graph
+
+__all__ = ["FORWARDS", "build_model", "init_params", "run_pipelined",
+           "_run_layer"]
 
 Params = dict[str, dict[str, jax.Array]]
 
@@ -53,180 +55,22 @@ def init_params(graph: LayerGraph, key: jax.Array,
     return params
 
 
-def _run_layer(l: LayerSpec, x: jax.Array, p: dict[str, jax.Array],
-               act: str | None, use_pallas: bool) -> jax.Array:
-    if l.op == "dwconv":
-        if use_pallas:
-            return depthwise(x, p["w"], p["b"], stride=l.stride, pad=l.pad,
-                             act=act)
-        return depthwise_conv2d_ref(x, p["w"], p["b"], stride=l.stride,
-                                    pad=l.pad, act=act)
-    if use_pallas:
-        return conv2d_gemm(x, p["w"], p["b"], stride=l.stride, pad=l.pad,
-                           act=act)
-    return conv2d_ref(x, p["w"], p["b"], stride=l.stride, pad=l.pad, act=act)
+def _make_forward(name: str) -> Callable:
+    def forward(params: Params, x: jax.Array, use_pallas: bool = False,
+                collect: dict | None = None, fuse: bool = True) -> jax.Array:
+        prog = build_program(name, use_pallas=use_pallas, fuse=fuse)
+        return prog.run(params, x, collect)
+
+    forward.__name__ = f"{name}_forward"
+    forward.__qualname__ = forward.__name__
+    forward.__doc__ = (f"Sequential forward pass of {name} "
+                       f"(step program in repro.dualcore.program).")
+    return forward
 
 
-def _avgpool_all(x):
-    return jnp.mean(x, axis=(1, 2), keepdims=True)
-
-
-def _mbv1_act(name: str) -> str | None:
-    return None if name == "fc" else "relu6"
-
-
-def _mbv2_act(name: str) -> str | None:
-    if name in ("fc",) or name.endswith("_project"):
-        return None                 # linear bottleneck / classifier head
-    return "relu6"
-
-
-def _forward_fused_chain(g: LayerGraph, params: Params, x: jax.Array,
-                         act_of: Callable[[str], str | None],
-                         collect: dict | None) -> jax.Array:
-    """Pallas path for the (almost) sequential nets: run the fusion plan,
-    one fused_block pallas_call per dw->pw / pw->dw->pw group.
-
-    ``collect`` only records feature maps that actually materialize in HBM
-    (the fused groups' outputs) — the whole point of fusion is that the
-    intermediates never exist.
-    """
-    h = x
-    for grp in plan_fusion(g):
-        first = g.layer(grp.layers[0])
-        last = g.layer(grp.layers[-1])
-        if first.op == "fc" and "avgpool" in first.fused:
-            h = _avgpool_all(h)
-        if grp.kind == "dw_pw":
-            d, p = (g.layer(nm) for nm in grp.layers)
-            pd, pp = params[d.name], params[p.name]
-            h = fused_dw_pw(h, pd["w"], pd["b"], pp["w"], pp["b"],
-                            stride=d.stride, pad=d.pad,
-                            dw_act=act_of(d.name), pw_act=act_of(p.name))
-        elif grp.kind == "pw_dw_pw":
-            e, d, p = (g.layer(nm) for nm in grp.layers)
-            res = h if ("add" in p.fused and d.stride == 1
-                        and e.C_i == p.C_o) else None
-            pe, pd, pp = params[e.name], params[d.name], params[p.name]
-            h = fused_inverted_residual(
-                h, pe["w"], pe["b"], pd["w"], pd["b"], pp["w"], pp["b"],
-                res, stride=d.stride, pad=d.pad, exp_act=act_of(e.name),
-                dw_act=act_of(d.name), proj_act=act_of(p.name))
-        else:
-            h = _run_layer(first, h, params[first.name], act_of(first.name),
-                           use_pallas=True)
-        if collect is not None:
-            collect[last.name] = h.shape
-    return h.reshape(h.shape[0], -1)
-
-
-def _maxpool(x, window=3, stride=2):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
-        (1, stride, stride, 1), "VALID")
-
-
-# --------------------------------------------------------------------------
-# MobileNet v1
-# --------------------------------------------------------------------------
-def mobilenet_v1_forward(params: Params, x: jax.Array,
-                         use_pallas: bool = False,
-                         collect: dict | None = None,
-                         fuse: bool = True) -> jax.Array:
-    g = get_graph("mobilenet_v1")
-    if use_pallas and fuse:
-        return _forward_fused_chain(g, params, x, _mbv1_act, collect)
-    h = x
-    for l in g.layers[:-1]:
-        h = _run_layer(l, h, params[l.name], "relu6", use_pallas)
-        if collect is not None:
-            collect[l.name] = h.shape
-    h = _avgpool_all(h)
-    fc = g.layers[-1]
-    h = _run_layer(fc, h, params[fc.name], None, use_pallas)
-    if collect is not None:
-        collect[fc.name] = h.shape
-    return h.reshape(h.shape[0], -1)
-
-
-# --------------------------------------------------------------------------
-# MobileNet v2 (inverted residuals + linear bottlenecks)
-# --------------------------------------------------------------------------
-def mobilenet_v2_forward(params: Params, x: jax.Array,
-                         use_pallas: bool = False,
-                         collect: dict | None = None,
-                         fuse: bool = True) -> jax.Array:
-    g = get_graph("mobilenet_v2")
-    if use_pallas and fuse:
-        return _forward_fused_chain(g, params, x, _mbv2_act, collect)
-    h = x
-    residual: jax.Array | None = None
-    for l in g.layers:
-        if l.name == "fc":
-            h = _avgpool_all(h)
-            h = _run_layer(l, h, params[l.name], None, use_pallas)
-            if collect is not None:
-                collect[l.name] = h.shape
-            return h.reshape(h.shape[0], -1)
-        if l.name.endswith("_expand") or l.name in ("conv1", "conv_last"):
-            act = "relu6"
-        elif l.name.endswith("_dw"):
-            act = "relu6"
-        else:                       # _project: linear bottleneck
-            act = None
-        if l.name.endswith("_expand") or (l.name.endswith("_dw")
-                                          and "expand" not in l.name):
-            if l.name.endswith("_expand"):
-                residual = h        # block input (for the residual add)
-        out = _run_layer(l, h, params[l.name], act, use_pallas)
-        if l.name.endswith("_project") and "add" in l.fused \
-                and residual is not None and residual.shape == out.shape:
-            out = out + residual
-        h = out
-        if collect is not None:
-            collect[l.name] = h.shape
-    raise AssertionError("fc layer missing")
-
-
-# --------------------------------------------------------------------------
-# SqueezeNet v1.1
-# --------------------------------------------------------------------------
-def squeezenet_forward(params: Params, x: jax.Array,
-                       use_pallas: bool = False,
-                       collect: dict | None = None,
-                       fuse: bool = True) -> jax.Array:
-    # no dwconv layers -> the fusion plan is all singletons; the per-layer
-    # kernels are already the fastest Pallas path here
-    g = get_graph("squeezenet")
-    l = g.layer("conv1")
-    h = _run_layer(l, x, params["conv1"], "relu", use_pallas)
-    if collect is not None:
-        collect["conv1"] = h.shape
-    h = _maxpool(jnp.pad(h, ((0, 0), (0, 1), (0, 1), (0, 0)),
-                         constant_values=-jnp.inf))
-    pool_after = {"fire3_e3x3", "fire5_e3x3"}   # v1.1 pool placement
-    for i in range(2, 10):
-        name = f"fire{i}"
-        sq = _run_layer(g.layer(f"{name}_squeeze"), h,
-                        params[f"{name}_squeeze"], "relu", use_pallas)
-        e1 = _run_layer(g.layer(f"{name}_e1x1"), sq,
-                        params[f"{name}_e1x1"], "relu", use_pallas)
-        e3 = _run_layer(g.layer(f"{name}_e3x3"), sq,
-                        params[f"{name}_e3x3"], "relu", use_pallas)
-        h = jnp.concatenate([e1, e3], axis=-1)
-        if collect is not None:
-            collect[f"{name}_squeeze"] = sq.shape
-            collect[f"{name}_e1x1"] = e1.shape
-            collect[f"{name}_e3x3"] = e3.shape
-        if f"{name}_e3x3" in pool_after:
-            h = _maxpool(jnp.pad(h, ((0, 0), (0, 1), (0, 1), (0, 0)),
-                                 constant_values=-jnp.inf))
-    h = _run_layer(g.layer("conv10"), h, params["conv10"], "relu",
-                   use_pallas)
-    if collect is not None:
-        collect["conv10"] = h.shape
-    return _avgpool_all(h).reshape(h.shape[0], -1)
-
+mobilenet_v1_forward = _make_forward("mobilenet_v1")
+mobilenet_v2_forward = _make_forward("mobilenet_v2")
+squeezenet_forward = _make_forward("squeezenet")
 
 FORWARDS: dict[str, Callable] = {
     "mobilenet_v1": mobilenet_v1_forward,
@@ -241,3 +85,20 @@ def build_model(name: str, key=None, dtype=jnp.float32):
     key = key if key is not None else jax.random.PRNGKey(0)
     params = init_params(g, key, dtype)
     return params, FORWARDS[name], g
+
+
+def run_pipelined(name: str, params: Params, schedule, images, *,
+                  devices=None, use_pallas: bool = True,
+                  fuse: bool | str = "group", jit_groups: bool = True,
+                  record: list | None = None):
+    """Execute ``schedule`` for real: pipeline ``images`` through the
+    alternating c/p-core group chain on the split device mesh with the
+    paper's one-slot offset (Fig.4b).  Returns the per-image logits in
+    submission order.  See ``repro.dualcore.runtime.DualCoreRunner`` for
+    the knobs; pass ``record=[]`` to capture the execution trace."""
+    from repro.dualcore.runtime import DualCoreRunner
+
+    runner = DualCoreRunner(name, params, schedule, devices=devices,
+                            use_pallas=use_pallas, fuse=fuse,
+                            jit_groups=jit_groups)
+    return runner.run_pipelined(images, record=record)

@@ -25,10 +25,6 @@ import time
 import jax
 import numpy as np
 
-from repro.lm.steps import TrainState
-from repro.train.optimizer import AdamWState
-
-
 def _flatten(state) -> tuple[list, object]:
     leaves, treedef = jax.tree.flatten(state)
     return leaves, treedef

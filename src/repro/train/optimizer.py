@@ -3,7 +3,6 @@ with global-norm clipping and a warmup-cosine schedule."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -18,11 +18,10 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Callable
 
 import jax
 
-from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.lm.config import ArchConfig
 from repro.lm.steps import TrainState, make_init_state, make_train_step
 from repro.train import checkpoint as ckpt
@@ -134,7 +133,6 @@ class TrainRunner:
     def remesh(self, state: TrainState, new_mesh, param_specs_fn):
         """Re-shard the live state onto a new mesh (elastic scale up/down)."""
         from repro.launch.sharding import param_specs, to_shardings
-        from jax.sharding import PartitionSpec as P
         specs = param_specs(state.params, new_mesh)
         shardings = to_shardings(specs, new_mesh)
         new_params = jax.tree.map(jax.device_put, state.params, shardings)

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.models.cnn import FORWARDS, build_model, _run_layer
-from repro.models.zoo import get_graph
 
 X = jax.random.normal(jax.random.PRNGKey(7), (1, 224, 224, 3), jnp.float32)
 

@@ -1,0 +1,96 @@
+"""The CI perf-regression gate must pass on identical reports and trip on
+an injected slowdown (ISSUE-3 satellite)."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))            # repo root -> benchmarks pkg
+
+from benchmarks.compare_bench import compare, extract_metrics, main  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REPORT = {
+    "conv_implicit_gemm": [
+        {"shape": "56x56x16->64 k3 s1", "im2col_ms": 120.0,
+         "implicit_ms": 10.0},
+        {"shape": "28x28x32->128 k3 s1", "im2col_ms": 80.0,
+         "implicit_ms": 8.0},
+    ],
+    "fused_dw_pw": [
+        {"shape": "14x14x256->256 s1", "unfused_ms": 30.0,
+         "fused_ms": 12.0},
+    ],
+    "measured": {
+        "mobilenet_v1": {"pipelined_ms": 350.0, "sequential_ms": 360.0},
+    },
+}
+
+
+def test_extract_gates_only_our_legs():
+    m = extract_metrics(REPORT)
+    # shape-labelled, stable keys; baseline legs (im2col/unfused/sequential)
+    # are not gated
+    assert "conv_implicit_gemm/56x56x16->64 k3 s1/implicit_ms" in m
+    assert "measured/mobilenet_v1/pipelined_ms" in m
+    assert len(m) == 4
+    assert not any("im2col" in k or "unfused" in k or "sequential" in k
+                   for k in m)
+
+
+def test_identical_reports_pass():
+    regs, _ = compare(REPORT, copy.deepcopy(REPORT))
+    assert regs == []
+
+
+def test_gate_trips_on_injected_3x_regression():
+    fresh = copy.deepcopy(REPORT)
+    fresh["conv_implicit_gemm"][0]["implicit_ms"] *= 3.0
+    regs, _ = compare(REPORT, fresh, threshold=2.0)
+    assert len(regs) == 1
+    assert regs[0].key == "conv_implicit_gemm/56x56x16->64 k3 s1/implicit_ms"
+    assert regs[0].ratio == pytest.approx(3.0)
+
+
+def test_gate_tolerates_sub_threshold_noise_and_new_entries():
+    fresh = copy.deepcopy(REPORT)
+    fresh["conv_implicit_gemm"][0]["implicit_ms"] *= 1.9   # < 2x: noise
+    fresh["fused_dw_pw"].append(
+        {"shape": "7x7x1024->1024 s1", "fused_ms": 99.0})  # new: not gated
+    del fresh["measured"]["mobilenet_v1"]                  # gone: not gated
+    regs, notes = compare(REPORT, fresh)
+    assert regs == []
+    assert any("new entry" in n for n in notes)
+    assert any("disappeared" in n for n in notes)
+
+
+def test_noise_floor_skips_micro_timings():
+    base = {"fused_dw_pw": [{"shape": "tiny", "fused_ms": 0.05}]}
+    fresh = {"fused_dw_pw": [{"shape": "tiny", "fused_ms": 0.5}]}   # 10x!
+    regs, notes = compare(base, fresh, min_ms=1.0)
+    assert regs == []
+    assert any("noise floor" in n for n in notes)
+
+
+def test_main_exit_codes(tmp_path):
+    base_p = tmp_path / "base.json"
+    fresh_p = tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(REPORT))
+    fresh = copy.deepcopy(REPORT)
+    fresh["measured"]["mobilenet_v1"]["pipelined_ms"] *= 3.0
+    fresh_p.write_text(json.dumps(fresh))
+    assert main(["--baseline", str(base_p), "--fresh", str(base_p)]) == 0
+    assert main(["--baseline", str(base_p), "--fresh", str(fresh_p)]) == 1
+
+
+def test_committed_baselines_have_gated_entries():
+    """The gate is only meaningful if the committed artifacts expose gated
+    metrics — guard against silently renaming the fields."""
+    for fname in ("BENCH_kernels.json", "BENCH_dualcore.json"):
+        with open(os.path.join(REPO, fname)) as f:
+            report = json.load(f)
+        assert extract_metrics(report), f"{fname} has no gated entries"

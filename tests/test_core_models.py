@@ -1,14 +1,13 @@
 """Paper-model anchors: graph stats, area model vs Tables I/III/VI/VIII,
 latency calibration vs Table IV."""
-import math
 
 import pytest
 
-from repro.core import (ALPHA, BoardModel, CoreConfig, DualCoreConfig,
+from repro.core import (BoardModel, CoreConfig,
                         P128_9, DUAL_BASELINE, DUAL_MBV1, DUAL_MBV2,
                         DUAL_SQZ, DUAL_MULTI, core_area, dual_core_area,
                         pe_structure_lut_equiv, simulate_single_core,
-                        layer_latency, graph_latency_report)
+                        graph_latency_report)
 from repro.models.zoo import get_graph
 
 TABLE_IV = {  # board-level cycle counts

@@ -1,17 +1,15 @@
 """Scheduler + search invariants and paper Table V/VI/VII trend anchors."""
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (ALLOCATION_SCHEMES, BoardModel, CoreConfig,
-                        DualCoreConfig, LayerSpec, P128_9, DUAL_BASELINE,
+from repro.core import (ALLOCATION_SCHEMES, BoardModel, LayerSpec,
+                        P128_9, DUAL_BASELINE,
                         DUAL_MBV1, DUAL_MBV2, DUAL_SQZ, DUAL_MULTI,
                         ResourceBudget, best_schedule, build_schedule,
                         chain_graph, evaluate_config, harmonic_mean,
-                        layer_latency, load_balance, simulate_dual_core,
+                        load_balance, simulate_dual_core,
                         simulate_single_core, search)
-from repro.core.scheduler import balanced_partition, Schedule
 from repro.models.zoo import get_graph
 
 B = BoardModel()
@@ -127,6 +125,7 @@ def test_table_vi_dual_beats_single(model, cfg, paper_fps):
     assert abs(dual - paper_fps) / paper_fps < 0.25
 
 
+@pytest.mark.slow
 def test_table_vii_multi_cnn_tradeoff():
     """Table VII: the multi-CNN config C(128,10)+P(32,12) has a higher
     harmonic-mean fps than at least two of the single-CNN-optimal configs,
@@ -143,6 +142,7 @@ def test_table_vii_multi_cnn_tradeoff():
     assert beaten >= 2
 
 
+@pytest.mark.slow
 def test_search_finds_feasible_config():
     g = get_graph("mobilenet_v1")
     res = search([g], B, max_evals=6)

@@ -1,7 +1,5 @@
 """Tile-sizing invariants (Eq.2-4) + ISA/simulator units."""
-import math
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BoardModel, CoreConfig, LayerSpec, P128_9,

@@ -1,15 +1,13 @@
 """dualmesh: the paper's design flow on TPU submeshes (DESIGN.md §2)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_arch, get_smoke
-from repro.dualmesh import (ALLOCATIONS, DualMeshRunner, Stage, TpuModel,
+from repro.dualmesh import (ALLOCATIONS, DualMeshRunner, TpuModel,
                             best_schedule, build, decode_cost, load_balance,
-                            prefill_cost, request_stages, search, split_mesh,
-                            theta_candidates)
+                            prefill_cost, request_stages, search, split_mesh)
 from repro.dualmesh.partition import abstract_split
 from repro.dualmesh.schedule import stage_cost
 
@@ -106,6 +104,7 @@ def test_best_schedule_beats_single_allocation():
 # --------------------------------------------------------------------------
 # Design-flow search (paper §V-B re-targeted)
 # --------------------------------------------------------------------------
+@pytest.mark.slow
 def test_search_finds_dual_win_on_balanced_workload():
     stages = request_stages(CFG, [(8, 8192, 256)] * 4)
     res = search(stages, CFG, n_devices=256, max_evals=10)
@@ -114,6 +113,7 @@ def test_search_finds_dual_win_on_balanced_workload():
     assert 0.05 <= res.theta <= 0.95
 
 
+@pytest.mark.slow
 def test_search_theta_tracks_workload_mix():
     """More decode-heavy workload -> larger share for the decode submesh
     (the Table VI 'heterogeneity drives theta' result, LM domain)."""

@@ -7,15 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fusion import FusionGroup, fused_layer_counts, plan_fusion
-from repro.core.graph import LayerSpec, chain_graph
+from repro.core.fusion import fused_layer_counts, plan_fusion
+from repro.core.graph import LayerSpec
 from repro.kernels import autotune
 from repro.kernels.conv_gemm.ops import conv2d_gemm
 from repro.kernels.conv_gemm.ref import conv2d_ref
 from repro.kernels.fused_block.kernel import (fused_dw_pw_conv,
                                               fused_pw_dw_pw_conv)
-from repro.kernels.fused_block.ops import (fused_dw_pw,
-                                           fused_inverted_residual)
+from repro.kernels.fused_block.ops import fused_dw_pw
 from repro.kernels.fused_block.ref import (fused_dw_pw_ref,
                                            fused_pw_dw_pw_ref)
 from repro.models.zoo import get_graph

@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps + hypothesis property tests,
 all against the pure-jnp oracles, in Pallas interpret mode (CPU)."""
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +47,7 @@ def test_matmul_shapes(m, k, n, dtype):
                                np.asarray(ref, np.float32), **tol(dtype))
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64),
        st.sampled_from([None, "relu", "relu6"]))
@@ -133,6 +133,7 @@ def test_flash_attention(b, hq, hkv, sq, sk, d, causal, dtype):
                                   else dict(rtol=2e-4, atol=2e-4)))
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 3), st.sampled_from([(4, 2), (8, 1), (6, 6)]),
        st.integers(1, 80), st.sampled_from([32, 64]))

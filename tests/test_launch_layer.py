@@ -7,7 +7,6 @@ shims below), and the HLO parser is tested on synthetic HLO text.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -50,7 +50,7 @@ def test_nstream_makespan_reduces_to_two_stream_recurrence():
 def test_two_stream_equivalence_on_random_chains():
     """N=2 simulation == closed form for arbitrary latency chains."""
     import random
-    from repro.dualmesh.schedule import DualSchedule, MeshGroup, Stage
+    from repro.dualmesh.schedule import DualSchedule, MeshGroup
 
     rng = random.Random(0)
     for _ in range(200):

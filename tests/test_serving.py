@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs.registry import get_smoke
 from repro.lm.model import init_cache, init_params
-from repro.lm.steps import make_generate, make_prefill, make_serve_step
+from repro.lm.steps import make_generate, make_serve_step
 
 KEY = jax.random.PRNGKey(0)
 

@@ -5,13 +5,12 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_smoke
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
 from repro.lm.steps import make_init_state
 from repro.train import checkpoint as ckpt
-from repro.train.optimizer import AdamW, SGDM, global_norm
+from repro.train.optimizer import AdamW
 from repro.train.runner import FaultInjector, RunnerConfig, TrainRunner
 
 

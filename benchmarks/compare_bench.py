@@ -3,9 +3,11 @@ the committed baseline and fail on large per-entry slowdowns.
 
 Gated metrics are the wall-clock fields this repo's perf story is built on
 (``implicit_ms`` / ``fused_ms`` from ``BENCH_kernels.json``,
-``pipelined_ms`` from ``BENCH_dualcore.json``); baseline-leg timings
-(im2col, unfused, sequential) are deliberately *not* gated — a slower
-baseline is not a regression.  Entries present on only one side are
+``pipelined_ms`` from ``BENCH_dualcore.json``, ``p50_ms`` / ``p95_ms``
+request latencies from ``BENCH_serving.json``); baseline-leg timings
+(im2col, unfused, sequential) and throughput fields (fps, tokens/s) are
+deliberately *not* gated — a slower baseline is not a regression, and
+higher-is-better fields need the opposite comparison.  Entries present on only one side are
 reported but never fail the gate (shapes come and go as benches evolve).
 
     python -m benchmarks.compare_bench \
@@ -23,7 +25,8 @@ import dataclasses
 import json
 import sys
 
-GATED_FIELDS = ("implicit_ms", "fused_ms", "pipelined_ms")
+GATED_FIELDS = ("implicit_ms", "fused_ms", "pipelined_ms",
+                "p50_ms", "p95_ms")
 
 
 @dataclasses.dataclass

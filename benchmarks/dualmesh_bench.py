@@ -112,6 +112,7 @@ def bench_stream_scaling_runtime(arch="qwen2_0_5b", batch=1,
     import jax
     from repro.dualmesh import DualMeshRunner, split_mesh
     from repro.lm.model import init_params
+    from repro.serving import DualMeshEngine, Request
 
     print(f"\n## N-stream scaling, measured on {len(jax.devices())} "
           f"local device(s) ({arch} smoke, per-stream batch={batch} "
@@ -125,9 +126,17 @@ def bench_stream_scaling_runtime(arch="qwen2_0_5b", batch=1,
                                 max_len=prompt_len + gen + 8)
         prompts = [jax.random.randint(k, (batch, prompt_len), 0, cfg.vocab)
                    for k in jax.random.split(jax.random.PRNGKey(1), n)]
-        runner.serve(prompts, gen_steps=gen)          # warm the jit caches
+        gs = runner.planned_group_size(prompts, [gen] * n)
+
+        def run_once():
+            eng = DualMeshEngine(runner, group_size=gs)
+            for p in prompts:
+                eng.submit(Request(p, gen_steps=gen))
+            return eng.drain()
+
+        run_once()                                    # warm the jit caches
         runner.trace.clear()
-        res = runner.serve(prompts, gen_steps=gen)
+        res = run_once()
         s = res.stats
         rows[n] = s["tokens_per_s"]
         print(f"N={n:<3} {s['wall_s']*1e3:8.1f} ms "

@@ -15,21 +15,23 @@ from repro.dualmesh import request_stages, search as tpu_search
 def measured_fps(model: str, schedule, image_size: int = 64,
                  images: int = 4) -> float:
     """Run the found schedule for real on the local c/p submeshes and
-    report measured pipelined throughput (small images on CPU hosts; the
-    absolute number is container-bound, the point is schedule->execution)."""
+    report measured streaming throughput through the serving engine (small
+    images on CPU hosts; the absolute number is container-bound, the point
+    is schedule->execution)."""
     import jax
 
     from repro.dualcore.runtime import DualCoreRunner
     from repro.models.cnn import init_params
+    from repro.serving import stream_images
 
     g = get_graph(model)
     params = init_params(g, jax.random.PRNGKey(0))
     runner = DualCoreRunner(model, params, schedule, use_pallas=False)
     xs = [jax.random.normal(k, (1, image_size, image_size, 3))
           for k in jax.random.split(jax.random.PRNGKey(1), images)]
-    runner.run_pipelined(xs[:2])               # warm the per-group jits
-    _, t = runner.timed(xs, "pipelined", reps=2)
-    return images / t
+    runner.run_sequential(xs[:1])              # warm the per-group jits
+    fps = max(stream_images(runner, xs).stats["fps"] for _ in range(2))
+    return fps
 
 
 def main():

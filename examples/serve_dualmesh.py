@@ -1,17 +1,17 @@
-"""Serve a small LM on the dual-mesh continuous-batching runtime — the
-paper's interleaved schedule generalized to an N-stream request queue on
-real devices (deliverable b, serving flavour).
+"""Serve a small LM on the dual-mesh continuous-batching runtime through
+the shared streaming engine API — the paper's interleaved schedule
+generalized to an N-stream request queue on real devices (deliverable b,
+serving flavour).
 
     PYTHONPATH=src python examples/serve_dualmesh.py
 """
-import time
-
 import jax
 
 from repro.configs.registry import get_smoke
 from repro.dualmesh import (DualMeshRunner, TpuModel, plan_admission,
                             request_stages, search, split_mesh)
 from repro.lm.model import init_params
+from repro.serving import DualMeshEngine, Request
 
 N_STREAMS = 4
 BATCH, PROMPT, GEN = 4, 64, 32
@@ -36,18 +36,21 @@ def main():
     print(f"admission: fuse decode groups of {adm.group_size} "
           f"(est {adm.est_tokens_per_s:.0f} tok/s model-side)")
 
-    # 3. execute the request queue on the local devices
+    # 3. execute the request queue on the local devices, through the
+    #    shared engine API (submit -> step -> drain)
     params = init_params(cfg, jax.random.PRNGKey(0))
     runner = DualMeshRunner(cfg, params, dual, max_len=PROMPT + GEN + 8)
+    engine = DualMeshEngine(runner, group_size=adm.group_size)
     prompts = [jax.random.randint(k, (BATCH, PROMPT), 0, cfg.vocab)
                for k in jax.random.split(jax.random.PRNGKey(1), N_STREAMS)]
-    t0 = time.perf_counter()
-    res = runner.serve(prompts, gen_steps=GEN, group_size=adm.group_size)
-    dt = time.perf_counter() - t0
+    for p in prompts:
+        engine.submit(Request(p, gen_steps=GEN))
+    res = engine.drain()
     shapes = [tuple(o.shape) for o in res.outputs]
-    print(f"generated {shapes} in {dt*1e3:.0f} ms "
+    print(f"generated {shapes} in {res.stats['wall_s']*1e3:.0f} ms "
           f"({res.stats['tokens_per_s']:.0f} tok/s, fused decode batches "
-          f"{res.stats['fused_sizes']})")
+          f"{res.stats['fused_sizes']}, p95 request latency "
+          f"{res.metrics.p95_ms():.0f} ms)")
     for kind, mesh_name, t in res.trace:
         print(f"  {kind:<8} on {mesh_name}-mesh  {t*1e3:7.1f} ms")
 

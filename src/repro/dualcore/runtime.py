@@ -208,28 +208,19 @@ class DualCoreRunner:
         neighbouring streams by the alternation invariant).  All calls of a
         slot are dispatched before any is awaited (async overlap).
 
+        Compatibility shim: the slot loop now lives in the streaming engine
+        (``repro.serving.DualCoreEngine``) whose online admission refills
+        drained slots from a live request queue — this method submits a
+        ready image list and drains, which reproduces the original static
+        dispatch schedule exactly.
+
         ``record``, when given, receives ``(slot, stream, group, core)``
         tuples in dispatch order — the execution trace the tests check
         against the analytical slot offsets.
         """
-        n_g, n_s = len(self.groups), len(images)
-        envs: list[Env] = [self._place({"h": x}, self.groups[0].core)
-                           for x in images]
-        for slot in range(n_g + n_s - 1):
-            for i in range(n_s):
-                g = slot - i
-                if not 0 <= g < n_g:
-                    continue
-                env = envs[i]
-                if g > 0 and self.groups[g].core != self.groups[g - 1].core:
-                    env = self._place(env, self.groups[g].core)
-                envs[i] = self._fns[g](self._params[self.groups[g].core],
-                                       env)
-                if record is not None:
-                    record.append((slot, i, g, self.groups[g].core))
-        outs = [env["out"] for env in envs]
-        jax.block_until_ready(outs)
-        return outs
+        from repro.serving.cnn import stream_images
+
+        return stream_images(self, images, record=record).outputs
 
     def run_sequential(self, images):
         """Strictly serialized baseline: one image at a time through the

@@ -7,7 +7,10 @@ silicon, generalized from two images to an online request queue.  On this
 CPU container both submeshes alias one device (degenerate but exercises the
 whole control path; tests use it).
 
-Scheduler loop (``DualMeshRunner.serve``), one slot per iteration:
+The scheduler loop now lives behind the shared streaming engine API
+(``repro.serving.DualMeshEngine`` — submit/step/drain, pluggable admission,
+bounded queue); ``DualMeshRunner.serve`` survives as a submit-everything-
+and-drain compatibility shim.  One engine step, i.e. one scheduler slot:
 
   1. advance every active decode group by a quantum of fused steps on the
      p-submesh (batch = sum of member batches — continuous batching);
@@ -31,7 +34,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Any, Sequence
 
 import jax
@@ -210,8 +212,14 @@ class DualMeshRunner:
             return g
         for m in done:
             cols = [h[m.row0:m.row0 + m.batch] for h in g.history]
-            outputs[m.rid] = (jnp.concatenate([m.prefix] + cols, 1)
-                              if cols else m.prefix)
+            if cols:
+                # prefix lives on the c-submesh, history on the p-submesh;
+                # on a real (non-degenerate) split the concat needs both
+                # operands co-located
+                prefix = jax.device_put(m.prefix, self._shard_p)
+                outputs[m.rid] = jnp.concatenate([prefix] + cols, 1)
+            else:
+                outputs[m.rid] = m.prefix
         alive = [m for m in g.members if m.remaining > 0]
         if not alive:
             return None
@@ -228,7 +236,8 @@ class DualMeshRunner:
         return g
 
     # ------------------------------------------------------------------
-    # the scheduler loop
+    # the scheduler loop — now a compatibility shim over the shared
+    # streaming engine API (repro.serving.DualMeshEngine owns the loop)
     # ------------------------------------------------------------------
     def serve(self, prompts: Sequence[jax.Array],
               gen_steps: int | Sequence[int] = 8,
@@ -236,7 +245,9 @@ class DualMeshRunner:
               prefill_chunk: int | None = None,
               quantum: int | None = None,
               hw=None) -> ServeResult:
-        """Run the request queue to completion.
+        """Run a ready request list to completion (compatibility shim:
+        submit everything to a fresh :class:`repro.serving.DualMeshEngine`
+        and drain it — new code should drive the engine directly).
 
         gen_steps      total generated tokens per request (the prefill
                        emits the first; int or one per request)
@@ -247,89 +258,24 @@ class DualMeshRunner:
         quantum        fused decode steps per scheduler slot (None = run a
                        group until its earliest member finishes)
         """
+        from repro.serving import DualMeshEngine, Request
+
         n = len(prompts)
         gens = ([int(gen_steps)] * n if isinstance(gen_steps, int)
                 else list(gen_steps))
         assert len(gens) == n
         if group_size is None:
-            group_size = self._planned_group_size(prompts, gens, hw)
-        group_size = max(1, group_size)
-        if quantum is not None:
-            quantum = max(1, quantum)   # a 0-quantum would never progress
+            group_size = self.planned_group_size(prompts, gens, hw)
+        engine = DualMeshEngine(self, group_size=max(1, group_size),
+                                prefill_chunk=prefill_chunk,
+                                quantum=quantum)
+        for p, g in zip(prompts, gens):
+            engine.submit(Request(payload=p, gen_steps=g))
+        res = engine.drain()
+        return ServeResult(outputs=res.outputs, trace=res.trace,
+                           stats=res.stats)
 
-        pending = deque(self.new_stream(p, g, rid=i)
-                        for i, (p, g) in enumerate(zip(prompts, gens)))
-        ready: list[StreamState] = []
-        groups: list[DecodeGroup] = []
-        outputs: dict[int, jax.Array] = {}
-        trace_start = len(self.trace)   # self.trace is cumulative across
-        #                                 calls; the result gets this call's
-        t0 = time.perf_counter()
-        n_prefill_tokens = 0
-        n_decode_tokens = 0
-        fused_sizes: list[int] = []
-
-        while pending or ready or groups:
-            # 1. p-submesh: advance active decode groups (async dispatch —
-            #    overlaps with the prefill dispatched right after)
-            for g in list(groups):
-                q = min(m.remaining for m in g.members)
-                if quantum is not None:
-                    q = min(q, quantum)
-                if q > 0:
-                    self._decode_group(g, q)
-                    n_decode_tokens += q * g.batch
-                kept = self._evict(g, outputs)
-                if kept is None:
-                    groups.remove(g)
-
-            # 2. c-submesh: admit the next request, chunked prefill
-            if pending:
-                st = pending.popleft()
-                want = st.gen_target
-                plen = st.tokens.shape[1]
-                n_prefill_tokens += st.tokens.size
-                st = self.run_prefill(st, prefill_chunk)
-                if want <= 0:           # prefill-only request: no emit
-                    outputs[st.rid] = st.tokens[:, :plen]
-                else:
-                    n_decode_tokens += st.tokens.shape[0]  # prefill emit
-                    st.gen_target -= 1
-                    if st.gen_target <= 0:
-                        outputs[st.rid] = st.tokens
-                    else:
-                        ready.append(st)
-
-            # 3. fuse position-aligned ready streams into decode groups
-            #    once group_size are waiting (or the queue has drained)
-            buckets: dict[tuple, list[StreamState]] = {}
-            for st in ready:
-                key = (st.tokens.shape[1],)
-                buckets.setdefault(key, []).append(st)
-            ready = []
-            for bucket in buckets.values():
-                while (len(bucket) >= group_size
-                       or (bucket and not pending)):
-                    take, bucket = (bucket[:group_size],
-                                    bucket[group_size:])
-                    fused_sizes.append(len(take))
-                    groups.append(self._fuse(take))
-                ready.extend(bucket)
-
-        outs = [outputs[i] for i in range(n)]
-        jax.block_until_ready(outs)
-        wall = time.perf_counter() - t0
-        total = n_prefill_tokens + n_decode_tokens
-        stats = {"n_streams": n, "group_size": group_size,
-                 "fused_sizes": fused_sizes,
-                 "prefill_tokens": n_prefill_tokens,
-                 "decode_tokens": n_decode_tokens,
-                 "total_tokens": total, "wall_s": wall,
-                 "tokens_per_s": total / wall if wall else float("inf")}
-        return ServeResult(outputs=outs, trace=self.trace[trace_start:],
-                           stats=stats)
-
-    def _planned_group_size(self, prompts, gens, hw) -> int:
+    def planned_group_size(self, prompts, gens, hw=None) -> int:
         """Makespan-aware default fusion width (homogeneous queues only;
         mixed shapes fall back to fuse-everything-aligned)."""
         shapes = {p.shape for p in prompts}

@@ -35,6 +35,7 @@ trace time inside the jit'd wrappers.  The benchmark path (``tune`` /
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -47,6 +48,11 @@ _DTYPE_TAGS = {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}
 
 # in-memory mirror of the JSON files, keyed by resolved path
 _MEM: dict[str, dict[str, Any]] = {}
+
+# when not None, get_config appends every signature it is asked for —
+# how the --sweep-zoo entry discovers exactly the signatures the op
+# wrappers consult (see record_signatures / zoo_signatures)
+_RECORDING: list["LayerSig"] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +129,8 @@ def get_config(sig: LayerSig, path: str | None = None) -> dict | None:
     performance (and vice versa), so a TPU run must not inherit a cache
     populated by CPU CI.
     """
+    if _RECORDING is not None:
+        _RECORDING.append(sig)
     entry = load_cache(path)["entries"].get(sig.key())
     if not entry:
         return None
@@ -296,3 +304,128 @@ def tune_layer(sig: LayerSig, *, path: str | None = None, reps: int = 3,
     else:
         raise ValueError(f"tune_layer: unsupported kind {sig.kind!r}")
     return tune(sig, run, path=path, reps=reps, force=force)
+
+
+# --------------------------------------------------------------------------
+# zoo sweep (python -m repro.kernels.autotune --sweep-zoo)
+# --------------------------------------------------------------------------
+ZOO_MODELS = ("mobilenet_v1", "mobilenet_v2", "squeezenet")
+
+
+@contextlib.contextmanager
+def record_signatures():
+    """Collect every LayerSig the op wrappers consult inside the block."""
+    global _RECORDING
+    prev, _RECORDING = _RECORDING, []
+    try:
+        yield _RECORDING
+    finally:
+        _RECORDING = prev
+
+
+def zoo_signatures(image_size: int = 224,
+                   models: tuple[str, ...] = ZOO_MODELS) -> list[LayerSig]:
+    """Every layer signature the zoo forwards consult at ``image_size`` —
+    per-layer and fused-block paths both — discovered by abstractly
+    evaluating the real step programs with signature recording on, so the
+    sweep can never drift from what the op wrappers actually ask for."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dualcore.program import build_program
+    from repro.models.cnn import init_params
+    from repro.models.zoo import get_graph
+
+    sigs: list[LayerSig] = []
+    seen: set[str] = set()
+    x = jnp.zeros((1, image_size, image_size, 3), jnp.float32)
+    for name in models:
+        params = init_params(get_graph(name), jax.random.PRNGKey(0))
+        for fuse in (False, True):
+            prog = build_program(name, use_pallas=True, fuse=fuse)
+            with record_signatures() as rec:
+                jax.eval_shape(
+                    lambda p, xx, prog=prog: prog.run(p, xx), params, x)
+            for s in rec:
+                if s.key() not in seen:
+                    seen.add(s.key())
+                    sigs.append(s)
+    return sigs
+
+
+def sweep_zoo(image_size: int = 224, *, reps: int = 3, limit: int = 0,
+              force: bool = False, path: str | None = None) -> dict:
+    """Warm the autotune cache over all zoo layer signatures (ROADMAP
+    "autotune coverage").  ``limit`` bounds how many *missing* signatures
+    get tuned this run (0 = all) so CI can warm incrementally inside its
+    time budget; cached entries always short-circuit.  Returns a summary
+    dict (total / cached / tuned / skipped)."""
+    sigs = zoo_signatures(image_size)
+    cached = [s for s in sigs if get_config(s, path) is not None]
+    missing = [s for s in sigs if get_config(s, path) is None]
+    if force:
+        missing, cached = sigs, []
+    todo = missing if limit <= 0 else missing[:limit]
+    for i, sig in enumerate(todo):
+        cfg = tune_layer(sig, path=path, reps=reps, force=force)
+        entry = load_cache(path)["entries"][sig.key()]
+        us = entry.get("us")
+        print(f"[{i + 1:>3}/{len(todo)}] {sig.key():<48} -> {cfg} "
+              f"({'n/a' if us is None else f'{us:.0f} us'})")
+    summary = {"image_size": image_size, "total": len(sigs),
+               "cached": len(cached), "tuned": len(todo),
+               "skipped": len(missing) - len(todo),
+               "cache_path": cache_path(path)}
+    print(f"sweep: {summary['total']} signatures @ {image_size}px — "
+          f"{summary['cached']} already cached, {summary['tuned']} tuned, "
+          f"{summary['skipped']} deferred (limit) -> "
+          f"{summary['cache_path']}")
+    return summary
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro.kernels.autotune",
+        description="Warm the block-shape autotune cache over the zoo.")
+    ap.add_argument("--sweep-zoo", action="store_true", required=True,
+                    help="tune every zoo layer signature into the cache")
+    ap.add_argument("--image-size", type=int, default=None,
+                    help="input H=W the signatures are taken at "
+                         "(default: 224 paper size; 64 with --smoke, "
+                         "matching the CI perf benches)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bounds: 64px signatures, reps=1, --limit 12 "
+                         "unless overridden (incremental warming via the "
+                         "persisted cache)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timing reps per candidate (default 3; 1 smoke)")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="max missing signatures tuned this run "
+                         "(0 = all; default 0, 12 with --smoke)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-tune even cached signatures")
+    ap.add_argument("--cache", default=None,
+                    help=f"cache file (default: ${CACHE_ENV} or "
+                         f"results/autotune_cache.json)")
+    args = ap.parse_args(argv)
+
+    image_size = args.image_size or (64 if args.smoke else 224)
+    reps = args.reps if args.reps is not None else (1 if args.smoke else 3)
+    limit = args.limit if args.limit is not None else (12 if args.smoke
+                                                      else 0)
+    sweep_zoo(image_size, reps=reps, limit=limit, force=args.force,
+              path=args.cache)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    # run the *canonical* module instance: under ``python -m`` this file
+    # executes as ``__main__``, whose module-level recording state would be
+    # invisible to the op wrappers importing ``repro.kernels.autotune``
+    from repro.kernels.autotune import main as _main
+
+    sys.exit(_main())

@@ -1,27 +1,37 @@
-"""Serving launcher: dual-mesh LM serving or the dual-core CNN pipeline.
+"""Serving launcher: both runtimes behind the shared streaming engine API.
 
-LM (the paper's schedule generalized to N-stream continuous batching):
+Two subcommands, one engine interface (``repro.serving.Engine`` —
+submit/step/drain with per-request latency metrics, bounded-queue
+backpressure, and a pluggable admission policy):
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
+LM (dual-mesh N-stream continuous batching):
+
+  PYTHONPATH=src python -m repro.launch.serve lm --arch qwen2_0_5b --smoke \
       --requests 8 --prompt-len 16 --gen 8 [--streams 8] \
-      [--theta 0.5 | --search]
+      [--theta 0.5 | --search] [--arrival-rate 1.0] [--max-queue 64]
 
-The request queue is served by the N-stream continuous-batching runtime:
-chunked prefills on the c-submesh overlap fused decode batches on the
-p-submesh, with the decode fusion width chosen by the makespan-aware
-admission plan (override with --group-size).  With --search, the §V-B
-design flow picks theta and the TP widths for the workload before
-launching; the realised schedule trace is printed.
+  Requests are submitted to a ``DualMeshEngine`` on a fixed Poisson-ish
+  arrival trace (``--arrival-rate``, in requests per scheduler slot;
+  ``inf`` submits everything up front): chunked prefills on the c-submesh
+  overlap fused decode batches on the p-submesh, the decode fusion width
+  defaults to the makespan-aware admission plan (``--group-size``
+  overrides), and with ``--search`` the §V-B design flow picks theta and
+  the TP widths first.
 
-CNN (the paper's actual workload, executed on the schedule for real):
+CNN (dual-core pipeline with online slot-refill admission):
 
-  PYTHONPATH=src python -m repro.launch.serve --dual-core mobilenet_v1 \
-      --requests 4 --image-size 64 [--scheme balanced] [--no-pallas]
+  PYTHONPATH=src python -m repro.launch.serve cnn mobilenet_v1 \
+      --requests 4 --image-size 64 [--scheme balanced] [--no-pallas] \
+      [--arrival-rate 1.0] [--max-queue 64]
 
-Builds the dual-core schedule, splits the local devices into c/p
-submeshes, and pipelines the images through the alternating group chain
-with the one-slot offset (Fig.4b); prints measured fps next to the
-analytical/simulated two-batch latency.
+  Builds the dual-core schedule, splits the local devices into c/p
+  submeshes, and streams the requests through a ``DualCoreEngine``: each
+  scheduler slot advances every in-flight image one exec group (the
+  Fig.4b one-slot offset) and refills the drained group-0 slot from the
+  request queue.  ``--requests 1`` is honored as the degenerate
+  single-image run (no silent workload bump).  Prints steady-state fps and
+  p50/p95 request latency next to the analytical/simulated two-batch
+  latency.
 """
 from __future__ import annotations
 
@@ -34,13 +44,29 @@ from repro.configs.registry import ARCH_IDS, get_arch, get_smoke
 from repro.dualmesh import (DualMeshRunner, TpuModel, plan_admission,
                             request_stages, search, split_mesh)
 from repro.lm.model import init_params
+from repro.serving import (DualCoreEngine, DualMeshEngine, Request,
+                           poisson_arrivals, replay)
 
 CNN_MODELS = ("mobilenet_v1", "mobilenet_v2", "squeezenet")
 CNN_SCHEMES = ("layer_type", "greedy", "round_robin", "balanced", "best")
 
 
-def serve_dual_core(args) -> int:
-    """--dual-core mode: pipelined CNN inference on the c/p submeshes."""
+def _arrivals(n: int, rate: float) -> list[int]:
+    """Arrival trace for n requests: Poisson-ish at ``rate`` per slot, or
+    everything at slot 0 when the rate is infinite."""
+    if rate == float("inf"):
+        return [0] * n
+    return poisson_arrivals(n, rate=rate, seed=0)
+
+
+def _print_latency(metrics) -> None:
+    print(f"[serve] latency: p50 {metrics.p50_ms():.1f} ms, "
+          f"p95 {metrics.p95_ms():.1f} ms over "
+          f"{metrics.completed} requests")
+
+
+def serve_cnn(args) -> int:
+    """``cnn`` subcommand: streaming CNN serving on the c/p submeshes."""
     from repro.core.arch import BoardModel, DUAL_BASELINE
     from repro.core.scheduler import best_schedule, build_schedule
     from repro.core.simulator import simulate_dual_core
@@ -48,79 +74,51 @@ def serve_dual_core(args) -> int:
     from repro.models.cnn import build_model
 
     board = BoardModel()
-    params, _, graph = build_model(args.dual_core)
+    params, _, graph = build_model(args.model)
     if args.scheme == "best":
         sched = best_schedule(graph, DUAL_BASELINE, board)
     else:
         sched = build_schedule(graph, DUAL_BASELINE, board, args.scheme)
 
-    runner = DualCoreRunner(args.dual_core, params, sched,
+    runner = DualCoreRunner(args.model, params, sched,
                             use_pallas=not args.no_pallas)
     es = runner.plan.exec_schedule
-    n = max(2, args.requests)
+    n = args.requests
     keys = jax.random.split(jax.random.PRNGKey(0), n)
     images = [jax.random.normal(k, (args.batch, args.image_size,
                                     args.image_size, 3)) for k in keys]
-    runner.run_pipelined(images[:2])            # warm the per-group jits
-    _, t_pipe = runner.timed(images, "pipelined", reps=2)
+    runner.run_sequential(images[:1])           # warm the per-group jits
+
+    engine = DualCoreEngine(runner, max_queue=args.max_queue)
+    res = replay(engine, [Request(x) for x in images],
+                 _arrivals(n, args.arrival_rate))
     _, t_seq = runner.timed(images, "sequential", reps=2)
 
     degenerate = runner.dual.c_mesh is runner.dual.p_mesh
     sim = simulate_dual_core(es)
-    print(f"[dual-core] {args.dual_core} scheme={sched.scheme}: "
+    print(f"[serve] cnn {args.model} scheme={sched.scheme}: "
           f"{len(es.groups)} exec groups on "
           f"{runner.dual.c_chips}c+{runner.dual.p_chips}p devices"
           + (" (degenerate: both submeshes alias one device, no real "
              "overlap)" if degenerate else ""))
-    print(f"[dual-core] model-side: T_b2={es.t_b2():,} cyc "
+    print(f"[serve] model-side: T_b2={es.t_b2():,} cyc "
           f"(sim {sim.cycles_two_images:,} cyc, "
           f"{board.cycles_to_seconds(sim.cycles_two_images)*1e3:.2f} ms "
           f"@{board.freq_mhz:.0f}MHz), "
           f"pipeline speedup {2*sum(es.group_latencies)/es.t_b2():.2f}x")
-    print(f"[dual-core] measured ({n} images x batch {args.batch} @ "
-          f"{args.image_size}px): pipelined {t_pipe*1e3:.0f} ms "
-          f"({n*args.batch/t_pipe:.2f} img/s), "
+    s = res.stats
+    print(f"[serve] streamed {n} request(s) x batch {args.batch} @ "
+          f"{args.image_size}px in {s['slots']} slots: "
+          f"{s['wall_s']*1e3:.0f} ms "
+          f"({n*args.batch/s['wall_s']:.2f} img/s), "
           f"sequential {t_seq*1e3:.0f} ms "
-          f"({t_seq/t_pipe:.2f}x)")
+          f"({t_seq/s['wall_s']:.2f}x)")
+    _print_latency(res.metrics)
     return 0
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS)
-    ap.add_argument("--dual-core", choices=CNN_MODELS, default=None,
-                    help="serve a CNN on the pipelined dual-core runtime "
-                         "instead of the LM dual-mesh path")
-    ap.add_argument("--scheme", choices=CNN_SCHEMES, default="balanced",
-                    help="dual-core allocation scheme (--dual-core only)")
-    ap.add_argument("--image-size", type=int, default=64,
-                    help="input H=W for --dual-core (224 = paper size)")
-    ap.add_argument("--no-pallas", action="store_true",
-                    help="use the XLA reference ops in --dual-core mode")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=2)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
-    ap.add_argument("--theta", type=float, default=0.5)
-    ap.add_argument("--streams", type=int, default=None,
-                    help="concurrent streams the planner optimizes for "
-                         "(default: --requests)")
-    ap.add_argument("--group-size", type=int, default=None,
-                    help="decode fusion width (default: makespan-aware)")
-    ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="chunked-prefill slice in tokens")
-    ap.add_argument("--search", action="store_true",
-                    help="run the design-flow search for theta/tp first")
-    ap.add_argument("--plan-chips", type=int, default=256,
-                    help="pod size for the planning search")
-    args = ap.parse_args(argv)
-
-    if args.dual_core is not None:
-        return serve_dual_core(args)
-    if args.arch is None:
-        ap.error("--arch is required unless --dual-core is given")
-
+def serve_lm(args) -> int:
+    """``lm`` subcommand: dual-mesh continuous batching."""
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     n_streams = args.streams or max(1, args.requests)
     theta = args.theta
@@ -140,26 +138,90 @@ def main(argv=None):
     plan = plan_admission(cfg, dual, TpuModel(), args.batch,
                           args.prompt_len, args.gen, n_streams,
                           max_group=args.group_size)
-    print(f"[serve] admission plan: group_size="
-          f"{args.group_size or plan.group_size} "
+    group_size = args.group_size or plan.group_size
+    print(f"[serve] admission plan: group_size={group_size} "
           f"(est {plan.est_tokens_per_s:.0f} tok/s model-side)")
 
     runner = DualMeshRunner(cfg, params, dual,
                             max_len=args.prompt_len + args.gen + 8)
-    keys = jax.random.split(jax.random.PRNGKey(1), max(1, args.requests))
+    n = max(1, args.requests)
+    keys = jax.random.split(jax.random.PRNGKey(1), n)
     prompts = [jax.random.randint(k, (args.batch, args.prompt_len), 0,
                                   cfg.vocab) for k in keys]
-    res = runner.serve(prompts, gen_steps=args.gen,
-                       group_size=args.group_size or plan.group_size,
-                       prefill_chunk=args.prefill_chunk)
+    engine = DualMeshEngine(runner, group_size=group_size,
+                            prefill_chunk=args.prefill_chunk,
+                            max_queue=args.max_queue)
+    res = replay(engine,
+                 [Request(p, gen_steps=args.gen) for p in prompts],
+                 _arrivals(n, args.arrival_rate))
     s = res.stats
-    print(f"[serve] {args.requests} requests x {args.batch} batch: "
+    print(f"[serve] {n} requests x {args.batch} batch: "
           f"{s['wall_s']*1e3:.0f} ms ({s['tokens_per_s']:.0f} tok/s, "
           f"{s['total_tokens']} tokens, fused decode batches "
           f"{s['fused_sizes']}, on {len(jax.devices())} local device(s))")
+    _print_latency(res.metrics)
     for kind, mesh_name, t in res.trace:
         print(f"  {kind:<8} on {mesh_name}-mesh  {t*1e3:7.1f} ms")
     return 0
+
+
+def _add_common(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--requests", type=int, default=2,
+                    help="number of requests to serve (>= 1)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--arrival-rate", type=float, default=float("inf"),
+                    help="Poisson-ish arrivals per scheduler slot "
+                         "(default inf: everything at slot 0)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded request queue (backpressure beyond it)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="Serve the LM or the CNN through the shared "
+                    "repro.serving engine API.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lm = sub.add_parser("lm", help="dual-mesh LM continuous batching")
+    lm.add_argument("--arch", choices=ARCH_IDS, required=True)
+    lm.add_argument("--smoke", action="store_true")
+    _add_common(lm)
+    lm.add_argument("--prompt-len", type=int, default=16)
+    lm.add_argument("--gen", type=int, default=8)
+    lm.add_argument("--theta", type=float, default=0.5)
+    lm.add_argument("--streams", type=int, default=None,
+                    help="concurrent streams the planner optimizes for "
+                         "(default: --requests)")
+    lm.add_argument("--group-size", type=int, default=None,
+                    help="decode fusion width (default: makespan-aware)")
+    lm.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill slice in tokens")
+    lm.add_argument("--search", action="store_true",
+                    help="run the design-flow search for theta/tp first")
+    lm.add_argument("--plan-chips", type=int, default=256,
+                    help="pod size for the planning search")
+    lm.set_defaults(func=serve_lm)
+
+    cnn = sub.add_parser("cnn", help="dual-core CNN streaming pipeline")
+    cnn.add_argument("model", choices=CNN_MODELS)
+    cnn.add_argument("--scheme", choices=CNN_SCHEMES, default="balanced",
+                     help="dual-core allocation scheme")
+    cnn.add_argument("--image-size", type=int, default=64,
+                     help="input H=W (224 = paper size)")
+    cnn.add_argument("--no-pallas", action="store_true",
+                     help="use the XLA reference ops")
+    _add_common(cnn)
+    cnn.set_defaults(func=serve_cnn)
+
+    args = ap.parse_args(argv)
+    if args.requests < 1:
+        ap.error(f"--requests must be >= 1, got {args.requests}")
+    if args.max_queue is not None and args.max_queue < 1:
+        ap.error(f"--max-queue must be >= 1, got {args.max_queue}")
+    if not args.arrival_rate > 0:
+        ap.error(f"--arrival-rate must be > 0, got {args.arrival_rate}")
+    return args.func(args)
 
 
 if __name__ == "__main__":

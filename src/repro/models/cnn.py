@@ -94,8 +94,11 @@ def run_pipelined(name: str, params: Params, schedule, images, *,
     """Execute ``schedule`` for real: pipeline ``images`` through the
     alternating c/p-core group chain on the split device mesh with the
     paper's one-slot offset (Fig.4b).  Returns the per-image logits in
-    submission order.  See ``repro.dualcore.runtime.DualCoreRunner`` for
-    the knobs; pass ``record=[]`` to capture the execution trace."""
+    submission order.  Compatibility wrapper: continuous serving goes
+    through ``repro.serving.DualCoreEngine`` (submit/step/drain with
+    online slot-refill admission); this submits a ready list and drains.
+    See ``repro.dualcore.runtime.DualCoreRunner`` for the knobs; pass
+    ``record=[]`` to capture the execution trace."""
     from repro.dualcore.runtime import DualCoreRunner
 
     runner = DualCoreRunner(name, params, schedule, devices=devices,

@@ -1,0 +1,37 @@
+"""repro.serving — one streaming engine API for both runtimes (DESIGN.md §9).
+
+The LM dual-mesh runner and the CNN dual-core runner serve through the same
+``Engine`` protocol (``submit`` / ``step`` / ``drain``), with shared
+``Request``/``Ticket``/``Completion`` lifecycle objects, per-request
+latency ``Metrics``, and a pluggable ``AdmissionPolicy``.  ``replay`` drives
+any engine with a fixed arrival trace (``poisson_arrivals`` builds one).
+"""
+from repro.serving.api import (AdmissionPolicy, Completion, Engine,
+                               EngineBase,
+                               FixedRateAdmission, GreedyAdmission, Metrics,
+                               QueueFull, Request, RequestMetrics,
+                               ServeResult, Ticket, percentile,
+                               poisson_arrivals, replay)
+from repro.serving.cnn import DualCoreEngine, stream_images
+from repro.serving.lm import DualMeshEngine
+
+__all__ = [
+    "AdmissionPolicy",
+    "Completion",
+    "DualCoreEngine",
+    "DualMeshEngine",
+    "Engine",
+    "EngineBase",
+    "FixedRateAdmission",
+    "GreedyAdmission",
+    "Metrics",
+    "QueueFull",
+    "Request",
+    "RequestMetrics",
+    "ServeResult",
+    "Ticket",
+    "percentile",
+    "poisson_arrivals",
+    "replay",
+    "stream_images",
+]

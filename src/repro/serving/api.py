@@ -1,0 +1,347 @@
+"""Workload-agnostic streaming engine API (DESIGN.md §9).
+
+The repo grew two serving stacks — ``dualmesh.DualMeshRunner.serve`` for the
+LM and ``dualcore.DualCoreRunner.run_pipelined`` for the CNN — that shared no
+interface despite both implementing the paper's keep-both-cores-busy story.
+This module is the single surface both now serve through:
+
+  Request / Ticket / Completion    one unit of work and its lifecycle
+  Metrics / RequestMetrics         per-request latency + aggregate throughput
+  AdmissionPolicy                  how many queued requests enter per step
+  Engine (protocol)                submit / step / drain / result
+  replay                           drive an engine with a fixed arrival trace
+
+Lifecycle: ``submit`` enqueues a :class:`Request` onto the engine's bounded
+queue and returns a :class:`Ticket` (raising :class:`QueueFull` when the
+queue is at capacity — backpressure is the caller's signal to slow down).
+``step`` advances the engine by exactly one scheduler slot: it services
+in-flight work, retires finished requests (returned as :class:`Completion`
+objects), and asks the :class:`AdmissionPolicy` how many queued requests to
+admit into freed capacity.  ``drain`` steps until no work remains and
+returns a :class:`ServeResult`; ``result`` snapshots what has completed so
+far without stepping.  Engines never spin a thread — the caller owns the
+loop, which is what lets ``replay`` interleave submissions mid-flight and
+tests drive slot-by-slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+
+class QueueFull(RuntimeError):
+    """``submit`` refused: the engine's bounded request queue is full.
+
+    This is backpressure, not an error state — the caller should retry after
+    ``step`` has drained capacity (``replay`` does exactly that)."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One unit of serving work.
+
+    ``payload`` is workload-defined: a ``(B, P)`` token prompt for the LM
+    engine, an ``(N, H, W, 3)`` image for the CNN engine.  ``gen_steps`` is
+    the LM decode budget (total generated tokens; the prefill emits the
+    first) and is ignored by the CNN engine.  ``rid`` is assigned by the
+    engine at submit time.
+    """
+
+    payload: Any
+    gen_steps: int = 0
+    rid: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """Receipt for a submitted request: its id and submission wall-time."""
+
+    rid: int
+    submitted_at: float
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Wall-clock lifecycle of one request (perf_counter timestamps)."""
+
+    rid: int
+    submitted_at: float
+    started_at: float | None = None     # admitted into the engine
+    finished_at: float | None = None    # output materialized
+
+    @property
+    def wait_s(self) -> float:
+        return (self.started_at or self.submitted_at) - self.submitted_at
+
+    @property
+    def service_s(self) -> float:
+        if self.finished_at is None or self.started_at is None:
+            return float("nan")
+        return self.finished_at - self.started_at
+
+    @property
+    def latency_s(self) -> float:
+        if self.finished_at is None:
+            return float("nan")
+        return self.finished_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: its ticket, output, and measured lifecycle."""
+
+    ticket: Ticket
+    output: Any
+    metrics: RequestMetrics
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy semantics, no numpy import)."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    if len(s) == 1:
+        return s[0]
+    pos = (len(s) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+
+
+@dataclasses.dataclass
+class Metrics:
+    """Aggregate view over completed requests."""
+
+    requests: list[RequestMetrics] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+
+    @property
+    def completed(self) -> int:
+        return len(self.requests)
+
+    def latencies_ms(self) -> list[float]:
+        return [m.latency_s * 1e3 for m in self.requests
+                if m.finished_at is not None]
+
+    def p50_ms(self) -> float:
+        return percentile(self.latencies_ms(), 50)
+
+    def p95_ms(self) -> float:
+        return percentile(self.latencies_ms(), 95)
+
+    def requests_per_s(self) -> float:
+        if not self.wall_s:
+            return float("inf") if self.completed else 0.0
+        return self.completed / self.wall_s
+
+    def summary(self) -> dict:
+        return {"completed": self.completed,
+                "wall_s": round(self.wall_s, 6),
+                "requests_per_s": round(self.requests_per_s(), 3),
+                "p50_ms": round(self.p50_ms(), 3),
+                "p95_ms": round(self.p95_ms(), 3)}
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What ``drain``/``result`` hand back: outputs in submission order,
+    per-request completions, aggregate metrics, and engine-specific stats
+    (token counts for the LM engine, slot counts for the CNN engine)."""
+
+    outputs: list[Any]
+    completions: list[Completion]
+    metrics: Metrics
+    stats: dict = dataclasses.field(default_factory=dict)
+    trace: list = dataclasses.field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# admission policies
+# --------------------------------------------------------------------------
+class AdmissionPolicy(Protocol):
+    """Decides, once per ``step``, how many queued requests to admit."""
+
+    def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        """Number of requests to move from the queue into the engine.  The
+        engine clamps the answer to what is actually admissible (free
+        capacity, queue length, and any structural per-step limit such as
+        the CNN pipeline's one-entry-per-slot offset)."""
+        ...
+
+
+@dataclasses.dataclass
+class GreedyAdmission:
+    """Fill all free capacity every step — maximum occupancy."""
+
+    def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        return max(0, min(queued, capacity - in_flight))
+
+
+@dataclasses.dataclass
+class FixedRateAdmission:
+    """At most ``per_step`` admissions per step — the paper's staggered
+    entry (one stream per slot) is ``per_step=1``."""
+
+    per_step: int = 1
+
+    def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        return max(0, min(queued, self.per_step, capacity - in_flight))
+
+
+# --------------------------------------------------------------------------
+# the engine protocol
+# --------------------------------------------------------------------------
+@runtime_checkable
+class Engine(Protocol):
+    """The shared serving surface (see module docstring for the contract)."""
+
+    def submit(self, request: Request | Any) -> Ticket: ...
+
+    def step(self) -> list[Completion]: ...
+
+    def drain(self) -> ServeResult: ...
+
+    def result(self) -> ServeResult: ...
+
+    @property
+    def has_work(self) -> bool: ...
+
+
+# --------------------------------------------------------------------------
+# shared engine bookkeeping
+# --------------------------------------------------------------------------
+class EngineBase:
+    """Queue / ticket / metrics bookkeeping shared by every engine.
+
+    Subclasses own the scheduling (``step`` and ``has_work``); this base
+    owns the request lifecycle: the bounded pending queue, rid assignment,
+    ticket + metrics stamping at submit, completion stamping (with the
+    materializing block) in :meth:`_finish`, and the :meth:`result`
+    snapshot — so submit semantics and accounting can never diverge
+    between workloads.
+    """
+
+    def __init__(self, *, max_queue: int | None = None):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 (got {max_queue}); "
+                             f"a 0-capacity queue could never admit work")
+        self.max_queue = max_queue
+        self._pending: deque[tuple[Request, Ticket]] = deque()
+        self._completions: dict[int, Completion] = {}
+        self._order: list[int] = []            # rids in submission order
+        self._metrics: dict[int, RequestMetrics] = {}
+        self._next_rid = 0
+        self._t0: float | None = None
+
+    @property
+    def queued(self) -> int:
+        return len(self._pending)
+
+    def submit(self, request: Request | Any) -> Ticket:
+        """Enqueue one request; raises :class:`QueueFull` at the bound."""
+        if self.max_queue is not None \
+                and len(self._pending) >= self.max_queue:
+            raise QueueFull(f"request queue at max_queue={self.max_queue}")
+        req = request if isinstance(request, Request) else Request(request)
+        rid = self._next_rid
+        self._next_rid += 1
+        req.rid = rid
+        ticket = Ticket(rid=rid, submitted_at=time.perf_counter())
+        self._metrics[rid] = RequestMetrics(rid=rid,
+                                            submitted_at=ticket.submitted_at)
+        self._order.append(rid)
+        self._pending.append((req, ticket))
+        return ticket
+
+    def _start_clock(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+
+    def _finish(self, rid: int, output) -> Completion:
+        """Materialize ``output``, stamp the finish time, file the
+        completion."""
+        import jax
+
+        jax.block_until_ready(output)
+        m = self._metrics[rid]
+        m.finished_at = time.perf_counter()
+        c = Completion(ticket=Ticket(rid=rid, submitted_at=m.submitted_at),
+                       output=output, metrics=m)
+        self._completions[rid] = c
+        return c
+
+    def _extra_stats(self, metrics: Metrics) -> dict:
+        """Engine-specific stats merged into ``result().stats``."""
+        return {}
+
+    def _trace_snapshot(self) -> list:
+        return []
+
+    def result(self) -> ServeResult:
+        """Snapshot of everything completed so far, in submission order."""
+        wall = ((time.perf_counter() - self._t0) if self._t0 is not None
+                else 0.0)
+        completions = [self._completions[r] for r in self._order
+                       if r in self._completions]
+        metrics = Metrics(requests=[c.metrics for c in completions],
+                          wall_s=wall)
+        stats = {"wall_s": wall}
+        stats.update(self._extra_stats(metrics))
+        return ServeResult(outputs=[c.output for c in completions],
+                           completions=completions, metrics=metrics,
+                           stats=stats, trace=self._trace_snapshot())
+
+    def drain(self) -> ServeResult:
+        """Step until no queued or in-flight work remains."""
+        while self.has_work:
+            self.step()
+        return self.result()
+
+
+# --------------------------------------------------------------------------
+# arrival-trace driving
+# --------------------------------------------------------------------------
+def poisson_arrivals(n: int, rate: float = 1.0, seed: int = 0) -> list[int]:
+    """Fixed Poisson-ish arrival trace: ``n`` step-indexed arrival times
+    with exponential inter-arrival gaps of mean ``1/rate`` steps, from a
+    seeded generator (deterministic across runs — benchmarks diff it)."""
+    import random
+
+    if not rate > 0:
+        raise ValueError(f"arrival rate must be > 0 (got {rate}); use an "
+                         f"all-zeros arrival list for everything-at-once")
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        out.append(int(t))
+        t += rng.expovariate(rate)
+    return out
+
+
+def replay(engine: Engine, requests: Sequence[Request | Any],
+           arrivals: Sequence[int] | None = None) -> ServeResult:
+    """Drive ``engine`` with requests arriving at the given step indices.
+
+    Requests whose arrival step has passed are submitted before each step;
+    a :class:`QueueFull` pushes the remaining submissions to later steps
+    (backpressure in action).  Returns the engine's final result once every
+    request has been submitted and served.
+    """
+    arrivals = list(arrivals) if arrivals is not None else [0] * len(requests)
+    if len(arrivals) != len(requests):
+        raise ValueError(f"{len(requests)} requests but "
+                         f"{len(arrivals)} arrival times")
+    order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+    nxt, step = 0, 0
+    while nxt < len(order) or engine.has_work:
+        while nxt < len(order) and arrivals[order[nxt]] <= step:
+            try:
+                engine.submit(requests[order[nxt]])
+            except QueueFull:
+                break                   # retry after the next step frees room
+            nxt += 1
+        engine.step()
+        step += 1
+    return engine.result()

@@ -1,0 +1,155 @@
+"""Streaming CNN engine: online admission for the dual-core pipeline.
+
+``DualCoreRunner.run_pipelined`` took a static image list and never refilled
+a drained slot — the pipeline wound down as streams finished even when more
+work was waiting.  :class:`DualCoreEngine` closes that gap (the ROADMAP
+"online admission loop" item): requests queue up (bounded, with
+:class:`~repro.serving.api.QueueFull` backpressure), and every scheduler
+slot the engine
+
+  1. advances each in-flight stream by one exec group, oldest stream first
+     (stream admitted at slot ``s`` runs group ``k - s`` at slot ``k`` — the
+     paper's one-slot offset, so neighbouring streams always occupy
+     different cores by the alternation invariant);
+  2. admits at most one queued request into the freed group-0 slot (the
+     structural per-step limit — two streams entering the same slot would
+     double-book a core; the :class:`AdmissionPolicy` can only throttle
+     below that);
+  3. retires streams that cleared the last group, materializing their
+     output (the per-request latency the metrics record) — only after every
+     dispatch of the slot is in flight, so the block never serializes the
+     cross-core overlap.
+
+With every request available up front this reproduces the
+``run_pipelined`` dispatch trace exactly (a test asserts it); under bursty
+arrivals, empty-queue slots become pipeline bubbles that later admissions
+refill.  Capacity equals the number of exec groups — the deepest the
+one-slot-offset pipeline can be — so in-flight work is bounded by
+construction and the queue bound covers the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING
+
+from repro.serving.api import (AdmissionPolicy, Completion, EngineBase,
+                               FixedRateAdmission, Metrics, RequestMetrics,
+                               ServeResult, Ticket)
+
+if TYPE_CHECKING:
+    from repro.dualcore.runtime import DualCoreRunner
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One in-flight stream: its env and the next group it will run."""
+
+    rid: int
+    env: dict
+    next_group: int
+    ticket: Ticket
+    metrics: RequestMetrics
+
+
+class DualCoreEngine(EngineBase):
+    """Continuous-streaming front end over a :class:`DualCoreRunner`.
+
+    ``record``, when given, receives ``(slot, rid, group, core)`` tuples in
+    dispatch order — the same trace ``run_pipelined`` produced, now with
+    admission slots determined online by arrivals instead of statically.
+    """
+
+    def __init__(self, runner: "DualCoreRunner", *,
+                 policy: AdmissionPolicy | None = None,
+                 max_queue: int | None = None,
+                 record: list | None = None):
+        super().__init__(max_queue=max_queue)
+        self.runner = runner
+        self.policy = policy or FixedRateAdmission(1)
+        self.capacity = len(runner.groups)
+        self._record = record
+        self._flight: list[_Flight] = []      # admission order: oldest first
+        self._slot = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self._flight)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending or self._flight)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, f: _Flight) -> None:
+        """Run flight ``f``'s next group (cross-core env hop included)."""
+        gi = f.next_group
+        groups = self.runner.groups
+        env = f.env
+        if gi > 0 and groups[gi].core != groups[gi - 1].core:
+            env = self.runner._place(env, groups[gi].core)
+        f.env = self.runner._fns[gi](self.runner._params[groups[gi].core],
+                                     env)
+        if self._record is not None:
+            self._record.append((self._slot, f.rid, gi, groups[gi].core))
+        f.next_group = gi + 1
+
+    def step(self) -> list[Completion]:
+        """Advance the pipeline by one slot (see module docstring)."""
+        self._start_clock()
+        finished: list[_Flight] = []
+        # 1. advance in-flight streams, oldest (deepest group) first
+        kept: list[_Flight] = []
+        for f in self._flight:
+            self._dispatch(f)
+            (finished if f.next_group >= self.capacity else kept).append(f)
+        self._flight = kept
+        # 2. admit into the freed group-0 slot — at most one per slot, or
+        #    the one-slot offset (one group per core per slot) breaks
+        n = self.policy.admit(queued=len(self._pending),
+                              in_flight=len(self._flight),
+                              capacity=self.capacity)
+        n = max(0, min(n, 1, self.capacity - len(self._flight),
+                       len(self._pending)))
+        if n:
+            req, ticket = self._pending.popleft()
+            self._metrics[req.rid].started_at = time.perf_counter()
+            f = _Flight(rid=req.rid,
+                        env=self.runner._place({"h": req.payload},
+                                               self.runner.groups[0].core),
+                        next_group=0, ticket=ticket,
+                        metrics=self._metrics[req.rid])
+            self._dispatch(f)
+            if f.next_group >= self.capacity:   # single-group chain
+                finished.append(f)
+            else:
+                self._flight.append(f)
+        self._slot += 1
+        # 3. retire only after every dispatch of the slot is in flight —
+        #    blocking earlier would serialize the cross-core overlap
+        return [self._finish(f.rid, f.env["out"]) for f in finished]
+
+    # ------------------------------------------------------------------
+    def _extra_stats(self, metrics: Metrics) -> dict:
+        return {"engine": "dualcore", "slots": self._slot,
+                "capacity": self.capacity,
+                "exec_groups": self.capacity,
+                "completed": metrics.completed,
+                "queued": len(self._pending),
+                "in_flight": len(self._flight),
+                "fps": metrics.requests_per_s()}
+
+
+def stream_images(runner: "DualCoreRunner", images, *,
+                  policy: AdmissionPolicy | None = None,
+                  max_queue: int | None = None,
+                  record: list | None = None) -> ServeResult:
+    """Serve a ready list of images through a fresh engine (the engine-API
+    equivalent of the old ``run_pipelined`` call shape: everything arrives
+    at slot 0, the admission loop staggers entry one slot apart)."""
+    eng = DualCoreEngine(runner, policy=policy, max_queue=max_queue,
+                         record=record)
+    for x in images:
+        eng.submit(x)
+    return eng.drain()

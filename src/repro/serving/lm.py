@@ -1,0 +1,167 @@
+"""Streaming LM engine: the dual-mesh serve loop behind the engine API.
+
+``DualMeshRunner.serve`` was a monolithic method — queue, admission,
+prefill, decode-group bookkeeping and metrics all in one while-loop.
+:class:`DualMeshEngine` factors that loop into the shared
+submit/step/drain surface: the runner keeps the mechanics (chunked prefill
+on the c-submesh, fused decode groups on the p-submesh, eviction), the
+engine owns the policy, and :class:`~repro.serving.api.EngineBase` owns
+the request lifecycle.  One ``step`` is one scheduler slot:
+
+  1. advance every active decode group by a quantum of fused steps on the
+     p-submesh (retiring members that hit their generation target);
+  2. ask the :class:`AdmissionPolicy` how many queued requests to admit and
+     run their chunked prefills on the c-submesh (default: one per slot,
+     the paper's stagger — the prefill dispatch overlaps the decode
+     dispatched just before);
+  3. fuse position-aligned prefilled streams into decode groups once
+     ``group_size`` of them are ready (or the queue has drained).
+
+``DualMeshRunner.serve`` survives as a thin compatibility shim: submit
+everything, drain, repackage.  Requests can also arrive mid-flight —
+``submit`` between ``step`` calls joins the live queue, and the bounded
+queue raises :class:`~repro.serving.api.QueueFull` as backpressure.
+"""
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING
+
+import jax
+
+from repro.serving.api import (AdmissionPolicy, Completion, EngineBase,
+                               FixedRateAdmission, Metrics)
+
+if TYPE_CHECKING:
+    from repro.dualmesh.runtime import DualMeshRunner
+
+
+class DualMeshEngine(EngineBase):
+    """Continuous-batching LM serving over a :class:`DualMeshRunner`.
+
+    group_size      decode fusion width; None fuses every position-aligned
+                    ready stream once the queue drains (callers wanting the
+                    makespan-aware width pass
+                    ``runner.planned_group_size(...)``)
+    prefill_chunk   chunked-prefill slice in tokens (None = whole prompt)
+    quantum         fused decode steps per slot (None = run a group until
+                    its earliest member finishes)
+    policy          admissions per slot (default one per slot, the stagger)
+    max_queue       bounded request queue; submit raises QueueFull beyond it
+    max_in_flight   cap on admitted-but-unfinished streams (None = no cap)
+    """
+
+    def __init__(self, runner: "DualMeshRunner", *,
+                 group_size: int | None = None,
+                 prefill_chunk: int | None = None,
+                 quantum: int | None = None,
+                 policy: AdmissionPolicy | None = None,
+                 max_queue: int | None = None,
+                 max_in_flight: int | None = None):
+        super().__init__(max_queue=max_queue)
+        self.runner = runner
+        self.group_size = None if group_size is None else max(1, group_size)
+        self.prefill_chunk = prefill_chunk
+        # a 0-quantum would never progress a decode group
+        self.quantum = None if quantum is None else max(1, quantum)
+        self.policy = policy or FixedRateAdmission(1)
+        self.max_in_flight = max_in_flight
+        self._ready: list = []                 # prefilled StreamStates
+        self._groups: list = []                # active DecodeGroups
+        self._trace_start = len(runner.trace)
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.fused_sizes: list[int] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self._ready) + sum(len(g.members) for g in self._groups)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending or self._ready or self._groups)
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[Completion]:
+        """One scheduler slot (see module docstring)."""
+        self._start_clock()
+        r = self.runner
+        done: list[tuple[int, jax.Array]] = []
+        # 1. p-submesh: advance active decode groups (async dispatch —
+        #    overlaps with the prefills dispatched right after)
+        for g in list(self._groups):
+            q = min(m.remaining for m in g.members)
+            if self.quantum is not None:
+                q = min(q, self.quantum)
+            if q > 0:
+                r._decode_group(g, q)
+                self.decode_tokens += q * g.batch
+            finished: dict[int, jax.Array] = {}
+            if r._evict(g, finished) is None:
+                self._groups.remove(g)
+            done.extend(finished.items())
+        # 2. c-submesh: admit queued requests, chunked prefill each
+        capacity = (self.max_in_flight if self.max_in_flight is not None
+                    else len(self._pending) + self.in_flight)
+        n = self.policy.admit(queued=len(self._pending),
+                              in_flight=self.in_flight, capacity=capacity)
+        for _ in range(max(0, min(n, len(self._pending)))):
+            req, _ticket = self._pending.popleft()
+            self._metrics[req.rid].started_at = time.perf_counter()
+            st = r.new_stream(req.payload, int(req.gen_steps), rid=req.rid)
+            want = st.gen_target
+            plen = st.tokens.shape[1]
+            self.prefill_tokens += st.tokens.size
+            st = r.run_prefill(st, self.prefill_chunk)
+            if want <= 0:               # prefill-only request: no emit
+                done.append((req.rid, st.tokens[:, :plen]))
+                continue
+            self.decode_tokens += st.tokens.shape[0]    # the prefill emit
+            st.gen_target -= 1
+            if st.gen_target <= 0:
+                done.append((req.rid, st.tokens))
+            else:
+                self._ready.append(st)
+        # 3. fuse position-aligned ready streams into decode groups once
+        #    group_size are waiting — or no further prefills can arrive
+        #    right now, because the queue drained or admission is stalled
+        #    at the in-flight cap (waiting for group_size would livelock:
+        #    the cap blocks the very admissions the gate is waiting for)
+        stalled = (self.max_in_flight is not None
+                   and self.in_flight >= self.max_in_flight)
+        buckets: dict[tuple, list] = {}
+        for st in self._ready:
+            buckets.setdefault((st.tokens.shape[1],), []).append(st)
+        self._ready = []
+        for bucket in buckets.values():
+            while (self.group_size is not None
+                   and len(bucket) >= self.group_size) \
+                    or (bucket and (not self._pending or stalled)):
+                width = (self.group_size if self.group_size is not None
+                         else len(bucket))
+                take, bucket = bucket[:width], bucket[width:]
+                self.fused_sizes.append(len(take))
+                self._groups.append(r._fuse(take))
+            self._ready.extend(bucket)
+        # 4. materialize completions only now, after every dispatch of the
+        #    slot is in flight — blocking inside the loops above would
+        #    serialize the c/p-submesh overlap (same rule as the CNN
+        #    engine's retire phase)
+        return [self._finish(rid, out) for rid, out in done]
+
+    # ------------------------------------------------------------------
+    def _extra_stats(self, metrics: Metrics) -> dict:
+        total = self.prefill_tokens + self.decode_tokens
+        wall = metrics.wall_s
+        return {"engine": "dualmesh",
+                "n_streams": len(self._order),
+                "group_size": self.group_size,
+                "fused_sizes": list(self.fused_sizes),
+                "prefill_tokens": self.prefill_tokens,
+                "decode_tokens": self.decode_tokens,
+                "total_tokens": total,
+                "tokens_per_s": total / wall if wall else float("inf")}
+
+    def _trace_snapshot(self) -> list:
+        return self.runner.trace[self._trace_start:]

@@ -65,13 +65,33 @@ def test_serve_step_emits_valid_token():
     assert int(cache.pos) == 1
 
 
-def test_serve_cli_smoke(capsys):
+def test_serve_cli_lm_smoke(capsys):
     from repro.launch import serve
-    rc = serve.main(["--arch", "qwen2_0_5b", "--smoke", "--requests", "2",
-                     "--batch", "1", "--prompt-len", "8", "--gen", "3"])
+    rc = serve.main(["lm", "--arch", "qwen2_0_5b", "--smoke",
+                     "--requests", "2", "--batch", "1",
+                     "--prompt-len", "8", "--gen", "3"])
     assert rc == 0
     out = capsys.readouterr().out
     assert "prefill" in out and "decode" in out
+    assert "p95" in out                  # engine latency metrics surfaced
+
+
+def test_serve_cli_cnn_smoke(capsys):
+    from repro.launch import serve
+    # --requests 1 must be honored as a degenerate single-image run
+    # (the old CLI silently bumped it to 2)
+    rc = serve.main(["cnn", "mobilenet_v1", "--requests", "1",
+                     "--batch", "1", "--image-size", "32", "--no-pallas"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "streamed 1 request(s)" in out
+    assert "img/s" in out and "p95" in out
+
+
+def test_serve_cli_rejects_zero_requests():
+    from repro.launch import serve
+    with pytest.raises(SystemExit):
+        serve.main(["cnn", "mobilenet_v1", "--requests", "0"])
 
 
 def test_train_cli_smoke(tmp_path, capsys):

@@ -4,10 +4,13 @@ the committed baseline and fail on large per-entry slowdowns.
 Gated metrics are the wall-clock fields this repo's perf story is built on
 (``implicit_ms`` / ``fused_ms`` from ``BENCH_kernels.json``,
 ``pipelined_ms`` from ``BENCH_dualcore.json``, ``p50_ms`` / ``p95_ms``
-request latencies from ``BENCH_serving.json``); baseline-leg timings
-(im2col, unfused, sequential) and throughput fields (fps, tokens/s) are
-deliberately *not* gated — a slower baseline is not a regression, and
-higher-is-better fields need the opposite comparison.  Entries present on only one side are
+request latencies from ``BENCH_serving.json`` / ``BENCH_fleet.json``),
+plus one higher-is-better field: ``aggregate_fps`` from
+``BENCH_fleet.json`` (the multi-network throughput claim), which fails
+when fresh drops below baseline / threshold.  Baseline-leg timings
+(im2col, unfused, sequential) and the remaining throughput fields (fps,
+tokens/s) are deliberately *not* gated — a slower baseline is not a
+regression.  Entries present on only one side are
 reported but never fail the gate (shapes come and go as benches evolve).
 
     python -m benchmarks.compare_bench \
@@ -27,6 +30,11 @@ import sys
 
 GATED_FIELDS = ("implicit_ms", "fused_ms", "pipelined_ms",
                 "p50_ms", "p95_ms")
+GATED_HIGHER_FIELDS = ("aggregate_fps",)       # regression = fresh DROPS
+
+
+def _is_higher_better(key: str) -> bool:
+    return key.rsplit("/", 1)[-1] in GATED_HIGHER_FIELDS
 
 
 @dataclasses.dataclass
@@ -49,7 +57,8 @@ def extract_metrics(report: dict) -> dict[str, float]:
     def walk(node, path: list[str]):
         if isinstance(node, dict):
             for k, v in node.items():
-                if k in GATED_FIELDS and isinstance(v, (int, float)):
+                if (k in GATED_FIELDS or k in GATED_HIGHER_FIELDS) \
+                        and isinstance(v, (int, float)):
                     out["/".join(path + [k])] = float(v)
                 elif isinstance(v, (dict, list)):
                     walk(v, path + [k])
@@ -77,6 +86,16 @@ def compare(baseline: dict, fresh: dict, threshold: float = 2.0,
             notes.append(f"entry disappeared (not gated): {key}")
             continue
         b, f = base_m[key], fresh_m[key]
+        if _is_higher_better(key):
+            # throughput: fresh falling below baseline/threshold fails
+            if b <= 0:
+                notes.append(f"skipped (non-positive baseline): {key}")
+            elif f * threshold < b:
+                regressions.append(Regression(key, b, f))
+            else:
+                notes.append(f"ok ({f / b:5.2f}x, higher-better): {key} "
+                             f"[{b:.2f} -> {f:.2f}]")
+            continue
         if b < min_ms:
             notes.append(f"skipped (baseline {b:.3f} ms < {min_ms} ms "
                          f"noise floor): {key}")
@@ -112,11 +131,16 @@ def main(argv=None) -> int:
         print(f"  {n}")
     if regressions:
         print(f"\nPERF GATE FAILED: {len(regressions)} entr"
-              f"{'y' if len(regressions) == 1 else 'ies'} slower than "
-              f"{args.threshold}x baseline ({args.baseline}):")
+              f"{'y' if len(regressions) == 1 else 'ies'} regressed "
+              f"beyond {args.threshold}x vs baseline ({args.baseline}):")
         for r in regressions:
-            print(f"  {r.ratio:5.2f}x  {r.key}  "
-                  f"[{r.baseline:.2f} -> {r.fresh:.2f} ms]")
+            if _is_higher_better(r.key):
+                print(f"  {r.ratio:5.2f}x  {r.key}  "
+                      f"[{r.baseline:.2f} -> {r.fresh:.2f}, "
+                      f"higher-is-better: throughput DROPPED]")
+            else:
+                print(f"  {r.ratio:5.2f}x  {r.key}  "
+                      f"[{r.baseline:.2f} -> {r.fresh:.2f} ms]")
         return 1
     print(f"\nperf gate OK: {len(extract_metrics(baseline))} baseline "
           f"entries within {args.threshold}x")

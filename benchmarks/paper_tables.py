@@ -5,6 +5,8 @@ aggregates them into bench_output.txt / EXPERIMENTS.md §Repro.
 """
 from __future__ import annotations
 
+import json
+import os
 import statistics
 
 from repro.core import (ALLOCATION_SCHEMES, BoardModel, CoreConfig,
@@ -40,6 +42,10 @@ TABLE_VI_PAPER = {  # (config, fps, baseline fps)
 TABLE_VII_PAPER = {  # multi-CNN workload, C(128,10)+P(32,12) column
     "mobilenet_v1": 326.2, "mobilenet_v2": 437.8, "squeezenet": 526.6,
     "average": 413.9,
+}
+FLEET_MIX = {  # fallback qps mix for table_vii_fleet when no committed
+    # BENCH_fleet.json exists (the artifact's own "mix" key wins)
+    "mobilenet_v1": 0.4, "mobilenet_v2": 0.35, "squeezenet": 0.25,
 }
 
 
@@ -168,6 +174,47 @@ def table_vii_multi_cnn():
     return rows
 
 
+def table_vii_fleet(mix=None, config=None, max_evals=6,
+                    measured_path=None):
+    """Table VII extended to a qps-weighted traffic mix: the fleet
+    planner's co-scheduled prediction (cycle domain, board frequency)
+    next to the measured serving numbers from the committed
+    ``BENCH_fleet.json`` (wall-clock on the bench host — different
+    domains, compared per-column, never to each other).  The rows come
+    verbatim from ``fleet.planner.plan_rows`` (a test cross-checks
+    that)."""
+    from repro.fleet import plan_fleet, plan_rows
+
+    print("\n## Table VII (fleet) — qps-weighted multi-network mix, "
+          "predicted vs measured")
+    measured, measured_agg, rep = {}, None, None
+    path = measured_path if measured_path is not None else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..",
+        "BENCH_fleet.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rep = json.load(f)
+        measured = {m: v["requests_per_s"]
+                    for m, v in rep["fleet"]["per_model"].items()}
+        measured_agg = rep["fleet"]["aggregate_fps"]
+    if mix is None:
+        # predict for the mix the bench actually measured — a retuned
+        # fleet_bench.MIX must not silently drift the prediction column
+        # onto a different workload (FLEET_MIX is only the no-artifact
+        # fallback)
+        mix = rep["mix"] if rep is not None else FLEET_MIX
+    plan = plan_fleet(mix, config=config, max_evals=max_evals)
+    rows = plan_rows(plan, measured, measured_agg)
+    print(f"planned config {plan.config} (theta={plan.theta:.2f}); "
+          f"measured column: fleet bench wall-clock on its host")
+    print(f"{'model':<14}{'share':>7}{'model-side':>12}{'predicted':>11}"
+          f"{'measured':>10}")
+    for name, share, fps, pred, meas in rows:
+        print(f"{name:<14}{share:>7.2f}{fps:>12.1f}{pred:>11.1f}"
+              + (f"{meas:>10.2f}" if meas is not None else "       n/a"))
+    return rows
+
+
 def table_viii_soa():
     print("\n## Table VIII — throughput/DSP vs published designs "
           "(normalised 8-bit ops)")
@@ -220,4 +267,5 @@ def run_all():
     table_v_scheduling()
     table_vi_pe_config()
     table_vii_multi_cnn()
+    table_vii_fleet()
     table_viii_soa()

@@ -7,7 +7,11 @@ constraints (Table II).
 
 The objective is pluggable:
   * single CNN  -> minimize two-batch latency T_b2 (maximize fps),
-  * multi-CNN   -> maximize the harmonic mean of per-model fps (Table VII).
+  * multi-CNN   -> maximize the harmonic mean of per-model fps (Table VII),
+  * fleet mix   -> maximize the *weighted* harmonic mean under a
+    {model: qps share} traffic mix (``weights=``) — the steady-state
+    aggregate fps of time-multiplexing the networks in those proportions
+    (``repro.fleet.planner`` drives this).
 """
 from __future__ import annotations
 
@@ -33,11 +37,23 @@ class SearchResult:
     visited_thetas: list[float]
 
 
-def harmonic_mean(xs: Sequence[float]) -> float:
+def harmonic_mean(xs: Sequence[float],
+                  weights: Sequence[float] | None = None) -> float:
+    """Harmonic mean of ``xs``; with ``weights`` the weighted form
+    ``sum(w) / sum(w/x)``.  For per-model fps under a traffic mix this IS
+    the aggregate fps of serving the models in those proportions — model m
+    takes ``w_m / fps_m`` of each unit of mixed work."""
     xs = list(xs)
     if not xs or any(x <= 0 for x in xs):
         return 0.0
-    return len(xs) / sum(1.0 / x for x in xs)
+    if weights is None:
+        return len(xs) / sum(1.0 / x for x in xs)
+    if len(weights) != len(xs):
+        raise ValueError(f"{len(xs)} values but {len(weights)} weights")
+    if any(w < 0 for w in weights) or not sum(weights) > 0:
+        raise ValueError(f"weights must be >= 0 with a positive sum "
+                         f"(got {list(weights)})")
+    return sum(weights) / sum(w / x for w, x in zip(weights, xs))
 
 
 # --------------------------------------------------------------------------
@@ -92,14 +108,16 @@ def t_b2_lower_bound(graph: LayerGraph, theta: float, dsp_budget: int,
 
 
 def objective_lower_bound(graphs: Sequence[LayerGraph], theta: float,
-                          dsp_budget: int, board: BoardModel) -> float:
-    """Upper bound on achievable harmonic-mean fps at this theta (from the
-    T_b2 lower bounds)."""
+                          dsp_budget: int, board: BoardModel,
+                          weights: Sequence[float] | None = None) -> float:
+    """Upper bound on achievable (weighted-)harmonic-mean fps at this theta
+    (from the T_b2 lower bounds) — valid for pruning because the weighted
+    harmonic mean is monotone in every per-model fps."""
     fps = []
     for g in graphs:
         lb = t_b2_lower_bound(g, theta, dsp_budget, board)
         fps.append(2 * board.freq_mhz * 1e6 / lb if lb > 0 else math.inf)
-    return harmonic_mean(fps)
+    return harmonic_mean(fps, weights)
 
 
 # --------------------------------------------------------------------------
@@ -147,13 +165,14 @@ def configs_at_theta(theta: float, budget: ResourceBudget,
 
 def evaluate_config(cfg: DualCoreConfig, graphs: Sequence[LayerGraph],
                     board: BoardModel,
-                    with_load_balance: bool = True):
+                    with_load_balance: bool = True,
+                    weights: Sequence[float] | None = None):
     fps, scheds = {}, {}
     for g in graphs:
         s = best_schedule(g, cfg, board, with_load_balance=with_load_balance)
         scheds[g.name] = s
         fps[g.name] = s.throughput_fps()
-    return harmonic_mean(fps.values()), fps, scheds
+    return harmonic_mean(list(fps.values()), weights), fps, scheds
 
 
 # --------------------------------------------------------------------------
@@ -163,10 +182,13 @@ def search(graphs: Sequence[LayerGraph], board: BoardModel,
            budget: ResourceBudget | None = None,
            theta0: float = 0.5, min_interval: float = 0.04,
            max_evals: int = 24,
-           with_load_balance: bool = True) -> SearchResult:
+           with_load_balance: bool = True,
+           weights: Sequence[float] | None = None) -> SearchResult:
     """Branch on theta starting at 0.5, bound with Eq.11, then local-search
     (n,v) pairs at promising thetas.  Early termination when an interval's
-    bound cannot beat the incumbent (paper §V-B2)."""
+    bound cannot beat the incumbent (paper §V-B2).  ``weights`` (aligned
+    with ``graphs``) switches the objective to the weighted harmonic mean —
+    the fleet planner's aggregate-fps-under-a-traffic-mix objective."""
     budget = budget or ResourceBudget()
     incumbent: tuple[float, DualCoreConfig, dict, dict] | None = None
     visited: list[float] = []
@@ -180,7 +202,7 @@ def search(graphs: Sequence[LayerGraph], board: BoardModel,
                 return
             evals += 1
             obj, fps, scheds = evaluate_config(cfg, graphs, board,
-                                               with_load_balance)
+                                               with_load_balance, weights)
             if incumbent is None or obj > incumbent[0]:
                 incumbent = (obj, cfg, fps, scheds)
 
@@ -192,7 +214,7 @@ def search(graphs: Sequence[LayerGraph], board: BoardModel,
         if hi - lo < min_interval:
             continue
         mid = 0.5 * (lo + hi)
-        ub = objective_lower_bound(graphs, mid, budget.n_dsp, board)
+        ub = objective_lower_bound(graphs, mid, budget.n_dsp, board, weights)
         # ub is the *best possible* fps at mid; prune if it can't beat
         # the incumbent (early termination).
         if incumbent is not None and ub <= incumbent[0]:

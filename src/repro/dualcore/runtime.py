@@ -160,7 +160,10 @@ class DualCoreRunner:
         self.plan = build_exec_plan(self.program, schedule,
                                     group_fusion=group_fusion)
         self.groups = self.plan.groups
-        self.dual: DualMesh = split_mesh(devices, theta)
+        # ``devices`` may be an already-split DualMesh — a fleet pool
+        # leases one split to every member so they share the submeshes
+        self.dual: DualMesh = (devices if isinstance(devices, DualMesh)
+                               else split_mesh(devices, theta))
         self._distinct = self.dual.c_mesh is not self.dual.p_mesh
         self._shard = {"c": NamedSharding(self.dual.c_mesh, P()),
                        "p": NamedSharding(self.dual.p_mesh, P())}

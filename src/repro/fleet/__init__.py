@@ -1,0 +1,41 @@
+"""repro.fleet — multi-network serving over one device pool (DESIGN.md §10).
+
+Multiplexes several models through one front end: a :class:`DevicePool`
+leases the shared c/p submesh split to every member engine, a
+:class:`Router` routes model-tagged requests and picks which member's exec
+group dispatches each step (round-robin / shortest-queue / weighted-fair /
+deadline-EDF), :class:`FleetEngine` implements the ``repro.serving``
+protocol over the members (interleaving core-complementary groups from
+*different* networks on the two submeshes — the multi-network Fig.4b),
+and :func:`plan_fleet` co-schedules a ``{model: qps share}`` mix through
+the §V-B design-space search (the Table VII flow).
+"""
+from repro.fleet.engine import FleetEngine, Member, build_cnn_fleet
+from repro.fleet.planner import (FleetPlan, mix_schedule, normalize_mix,
+                                 plan_fleet, plan_rows)
+from repro.fleet.pool import DevicePool, Lease
+from repro.fleet.router import (POLICY_NAMES, DeadlineEDF, MemberView,
+                                RoundRobin, Router, SchedulingPolicy,
+                                ShortestQueue, WeightedFair, make_policy)
+
+__all__ = [
+    "DeadlineEDF",
+    "DevicePool",
+    "FleetEngine",
+    "FleetPlan",
+    "Lease",
+    "Member",
+    "MemberView",
+    "POLICY_NAMES",
+    "RoundRobin",
+    "Router",
+    "SchedulingPolicy",
+    "ShortestQueue",
+    "WeightedFair",
+    "build_cnn_fleet",
+    "make_policy",
+    "mix_schedule",
+    "normalize_mix",
+    "plan_fleet",
+    "plan_rows",
+]

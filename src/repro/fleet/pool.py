@@ -1,0 +1,90 @@
+"""Shared device pool for fleet serving (DESIGN.md §10).
+
+One physical device pool backs every member of a fleet: the pool performs
+the theta split into the c/p submeshes ONCE (``dualmesh.partition.
+split_mesh`` — the Eq.10 DSP ratio, exactly as a single ``DualCoreRunner``
+would) and *leases* that split to each member engine.  Members therefore
+place their c-groups on the same c-submesh and their p-groups on the same
+p-submesh, which is what lets a conv-heavy exec group of one network
+overlap a dw-heavy group of another: the two dispatches land on disjoint
+device queues, the multi-network generalization of the Fig.4b two-image
+offset.
+
+Leases are named and exclusive per name — double-leasing the same member
+name is a wiring bug (two engines would account the same traffic), and
+releasing frees the name for a replacement engine.  The pool never copies
+or repartitions devices per member; it is bookkeeping over one split.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.dualmesh.partition import DualMesh, split_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """One member's hold on the pool's submeshes."""
+
+    name: str
+    dual: DualMesh
+
+
+class DevicePool:
+    """Owns the device list and the single c/p split every member shares.
+
+    theta is the c-share of the pool (Eq.10); with fewer than two devices
+    the split is degenerate (both submeshes alias one device) but the fleet
+    stays functional — same behavior as a standalone runner.
+    """
+
+    def __init__(self, devices=None, *, theta: float = 0.5):
+        self.devices = list(devices if devices is not None
+                            else jax.devices())
+        self.theta = theta
+        self.dual: DualMesh = split_mesh(self.devices, theta)
+        self._leases: dict[str, Lease] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def c_chips(self) -> int:
+        return self.dual.c_chips
+
+    @property
+    def p_chips(self) -> int:
+        return self.dual.p_chips
+
+    @property
+    def degenerate(self) -> bool:
+        """True when both submeshes alias the same devices (single-device
+        host): dispatches still serialize on one queue."""
+        return self.dual.c_mesh is self.dual.p_mesh
+
+    @property
+    def leases(self) -> list[str]:
+        return list(self._leases)
+
+    # ------------------------------------------------------------------
+    def lease(self, name: str) -> DualMesh:
+        """Lease the shared c/p split to member ``name`` (exclusive)."""
+        if name in self._leases:
+            raise ValueError(f"pool lease {name!r} already held; release "
+                             f"it before re-leasing (one engine per name)")
+        self._leases[name] = Lease(name=name, dual=self.dual)
+        return self.dual
+
+    def release(self, name: str) -> None:
+        if name not in self._leases:
+            raise KeyError(f"no lease named {name!r} "
+                           f"(held: {sorted(self._leases)})")
+        del self._leases[name]
+
+    def stats(self) -> dict:
+        return {"devices": len(self.devices),
+                "theta": self.dual.theta,
+                "c_chips": self.c_chips,
+                "p_chips": self.p_chips,
+                "degenerate": self.degenerate,
+                "leases": sorted(self._leases)}

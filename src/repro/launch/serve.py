@@ -32,6 +32,24 @@ CNN (dual-core pipeline with online slot-refill admission):
   single-image run (no silent workload bump).  Prints steady-state fps and
   p50/p95 request latency next to the analytical/simulated two-batch
   latency.
+
+Fleet (several CNNs multiplexed over one device pool, DESIGN.md §10):
+
+  PYTHONPATH=src python -m repro.launch.serve fleet \
+      --models mbv1,mbv2,squeezenet --mix 0.4,0.35,0.25 --requests 9 \
+      [--policy weighted_fair] [--plan] [--scheme balanced] [--no-pallas] \
+      [--no-interleave] [--image-size 64] [--arrival-rate] [--max-queue]
+
+  One ``DevicePool`` leases the shared c/p split to a ``DualCoreEngine``
+  per model; requests tagged per the traffic mix stream through the
+  ``FleetEngine``, whose scheduling policy picks which member's exec
+  group dispatches first each slot, with up to ``--co-dispatch`` further
+  members following core-complementary-first per the latency model —
+  conv-heavy and dw-heavy groups from different networks overlap on the
+  two submeshes.  ``--plan`` first
+  runs the §V-B co-scheduling search over the mix and serves under the
+  planned PE config, printing the predicted Table-VII-style throughput
+  next to the measured one.  Prints aggregate fps and per-model p50/p95.
 """
 from __future__ import annotations
 
@@ -49,6 +67,9 @@ from repro.serving import (DualCoreEngine, DualMeshEngine, Request,
 
 CNN_MODELS = ("mobilenet_v1", "mobilenet_v2", "squeezenet")
 CNN_SCHEMES = ("layer_type", "greedy", "round_robin", "balanced", "best")
+MODEL_ALIASES = {"mbv1": "mobilenet_v1", "mbv2": "mobilenet_v2",
+                 "sqz": "squeezenet",
+                 **{m: m for m in CNN_MODELS}}
 
 
 def _arrivals(n: int, rate: float) -> list[int]:
@@ -114,6 +135,95 @@ def serve_cnn(args) -> int:
           f"sequential {t_seq*1e3:.0f} ms "
           f"({t_seq/s['wall_s']:.2f}x)")
     _print_latency(res.metrics)
+    return 0
+
+
+def _parse_fleet_mix(args) -> dict[str, float]:
+    """--models/--mix -> normalized {model: share} (aliases expanded)."""
+    names = []
+    for tok in args.models.split(","):
+        tok = tok.strip()
+        if tok not in MODEL_ALIASES:
+            raise SystemExit(f"unknown model {tok!r}; one of "
+                             f"{sorted(MODEL_ALIASES)}")
+        names.append(MODEL_ALIASES[tok])
+    if len(set(names)) != len(names):
+        raise SystemExit(f"duplicate models in --models: {names}")
+    if args.mix is None:
+        shares = [1.0] * len(names)
+    else:
+        try:
+            shares = [float(t) for t in args.mix.split(",")]
+        except ValueError:
+            raise SystemExit(f"--mix must be comma-separated numbers "
+                             f"(got {args.mix!r})") from None
+        if len(shares) != len(names):
+            raise SystemExit(f"{len(names)} models but {len(shares)} "
+                             f"mix shares")
+    from repro.fleet import normalize_mix
+
+    try:
+        return normalize_mix(dict(zip(names, shares)))
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+
+
+def serve_fleet(args) -> int:
+    """``fleet`` subcommand: multi-network serving over one device pool."""
+    from repro.fleet import (build_cnn_fleet, make_policy, mix_schedule,
+                             plan_fleet, plan_rows)
+
+    mix = _parse_fleet_mix(args)
+    plan = None
+    if args.plan:
+        plan = plan_fleet(mix, max_evals=args.plan_evals)
+        print(f"[serve] fleet plan: config={plan.config} "
+              f"theta={plan.theta:.2f} predicted aggregate "
+              f"{plan.aggregate_fps:.1f} fps")
+    engine, pool = build_cnn_fleet(
+        list(mix), plan=plan, scheme=args.scheme,
+        use_pallas=not args.no_pallas, policy=make_policy(args.policy),
+        weights=mix, max_queue=args.max_queue,
+        co_dispatch=0 if args.no_interleave else args.co_dispatch,
+        burst=args.burst)
+    n = args.requests
+    tags = mix_schedule(mix, n)
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    images = [jax.random.normal(k, (args.batch, args.image_size,
+                                    args.image_size, 3)) for k in keys]
+    for m in engine.members:             # warm each member's per-group jits
+        # any image warms a member — a skewed mix or --requests < number
+        # of models can leave a member with no tagged request at all
+        m.engine.runner.run_sequential(images[:1])
+
+    s = pool.stats()
+    print(f"[serve] fleet {'+'.join(mix)} policy={args.policy} "
+          f"({s['c_chips']}c+{s['p_chips']}p devices"
+          + (", degenerate: both submeshes alias one device"
+             if s["degenerate"] else "") + ")")
+    res = replay(engine, [Request(x, model=t)
+                          for x, t in zip(images, tags)],
+                 _arrivals(n, args.arrival_rate))
+    st = res.stats
+    print(f"[serve] streamed {n} request(s) in {st['slots']} fleet slots "
+          f"({st['dispatches']} member dispatches): "
+          f"{st['wall_s']*1e3:.0f} ms, aggregate "
+          f"{st['aggregate_fps']:.2f} fps")
+    for name, pm in st["per_model"].items():
+        d = st["per_member"][name]
+        print(f"  {name:<14} {pm['completed']} done "
+              f"({d['dispatches']} dispatches)  "
+              f"p50 {pm['p50_ms']:.1f} ms  p95 {pm['p95_ms']:.1f} ms  "
+              f"{pm['requests_per_s']:.2f} fps")
+    if plan is not None:
+        measured = {m: v["requests_per_s"]
+                    for m, v in st["per_model"].items()}
+        print("[serve] predicted (Table-VII-style) vs measured fps:")
+        for name, share, fps, pred, meas in plan_rows(
+                plan, measured, st["aggregate_fps"]):
+            print(f"  {name:<14} share={share:.2f} model-side={fps:8.1f} "
+                  f"predicted={pred:8.1f} measured="
+                  + (f"{meas:8.2f}" if meas is not None else "     n/a"))
     return 0
 
 
@@ -213,6 +323,47 @@ def main(argv=None):
                      help="use the XLA reference ops")
     _add_common(cnn)
     cnn.set_defaults(func=serve_cnn)
+
+    from repro.fleet import POLICY_NAMES
+
+    fleet = sub.add_parser(
+        "fleet", help="multi-CNN fleet over one device pool")
+    fleet.add_argument("--models", default="mbv1,mbv2,squeezenet",
+                       help="comma-separated member models "
+                            "(aliases: mbv1, mbv2, sqz)")
+    fleet.add_argument("--mix", default=None,
+                       help="comma-separated qps shares aligned with "
+                            "--models (default: equal)")
+    fleet.add_argument("--policy", choices=POLICY_NAMES,
+                       default="weighted_fair",
+                       help="cross-engine step scheduling policy")
+    fleet.add_argument("--scheme", choices=CNN_SCHEMES, default="balanced",
+                       help="per-model allocation scheme (without --plan)")
+    fleet.add_argument("--plan", action="store_true",
+                       help="co-schedule the mix through the §V-B search "
+                            "first and serve under the planned PE config")
+    fleet.add_argument("--plan-evals", type=int, default=8,
+                       help="search budget for --plan")
+    fleet.add_argument("--image-size", type=int, default=64,
+                       help="input H=W (224 = paper size)")
+    fleet.add_argument("--no-pallas", action="store_true",
+                       help="use the XLA reference ops")
+    fleet.add_argument("--co-dispatch", type=int, default=None,
+                       help="max members co-dispatched per slot beyond "
+                            "the primary (default: all with work)")
+    fleet.add_argument("--burst", type=int, default=4,
+                       help="consecutive slots each batched member "
+                            "advances per fleet step (locality "
+                            "amortization; raises other members' "
+                            "queueing by up to burst-1 slots; default 4 "
+                            "matches the BENCH_fleet configuration — 1 "
+                            "is strict slot-granular interleaving)")
+    fleet.add_argument("--no-interleave", action="store_true",
+                       help="disable co-dispatch entirely (same as "
+                            "--co-dispatch 0): one policy-picked member "
+                            "per slot")
+    _add_common(fleet)
+    fleet.set_defaults(func=serve_fleet)
 
     args = ap.parse_args(argv)
     if args.requests < 1:

@@ -6,18 +6,19 @@ The LM dual-mesh runner and the CNN dual-core runner serve through the same
 latency ``Metrics``, and a pluggable ``AdmissionPolicy``.  ``replay`` drives
 any engine with a fixed arrival trace (``poisson_arrivals`` builds one).
 """
-from repro.serving.api import (AdmissionPolicy, Completion, Engine,
-                               EngineBase,
+from repro.serving.api import (AdmissionPolicy, Completion,
+                               DeadlineAdmission, Engine, EngineBase,
                                FixedRateAdmission, GreedyAdmission, Metrics,
-                               QueueFull, Request, RequestMetrics,
-                               ServeResult, Ticket, percentile,
-                               poisson_arrivals, replay)
+                               PriorityAdmission, QueueFull, Request,
+                               RequestMetrics, ServeResult, Ticket,
+                               percentile, poisson_arrivals, replay)
 from repro.serving.cnn import DualCoreEngine, stream_images
 from repro.serving.lm import DualMeshEngine
 
 __all__ = [
     "AdmissionPolicy",
     "Completion",
+    "DeadlineAdmission",
     "DualCoreEngine",
     "DualMeshEngine",
     "Engine",
@@ -25,6 +26,7 @@ __all__ = [
     "FixedRateAdmission",
     "GreedyAdmission",
     "Metrics",
+    "PriorityAdmission",
     "QueueFull",
     "Request",
     "RequestMetrics",

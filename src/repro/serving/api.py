@@ -47,11 +47,22 @@ class Request:
     the LM decode budget (total generated tokens; the prefill emits the
     first) and is ignored by the CNN engine.  ``rid`` is assigned by the
     engine at submit time.
+
+    ``model`` tags the request with the network it targets — the fleet
+    front-end routes on it and :meth:`Metrics.by_model` breaks latency
+    percentiles down by it.  ``deadline`` is any caller-defined comparable
+    (absolute wall-clock, a slot index, ...) that
+    :class:`DeadlineAdmission` orders admissions by; ``priority`` (higher
+    is more urgent) is what :class:`PriorityAdmission` orders by.  Both are
+    inert under the FIFO policies.
     """
 
     payload: Any
     gen_steps: int = 0
     rid: int | None = None
+    model: str | None = None
+    deadline: float | None = None
+    priority: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +81,7 @@ class RequestMetrics:
     submitted_at: float
     started_at: float | None = None     # admitted into the engine
     finished_at: float | None = None    # output materialized
+    model: str | None = None            # Request.model tag, if any
 
     @property
     def wait_s(self) -> float:
@@ -121,9 +133,10 @@ class Metrics:
     def completed(self) -> int:
         return len(self.requests)
 
-    def latencies_ms(self) -> list[float]:
+    def latencies_ms(self, model: str | None = None) -> list[float]:
         return [m.latency_s * 1e3 for m in self.requests
-                if m.finished_at is not None]
+                if m.finished_at is not None
+                and (model is None or m.model == model)]
 
     def p50_ms(self) -> float:
         return percentile(self.latencies_ms(), 50)
@@ -136,12 +149,41 @@ class Metrics:
             return float("inf") if self.completed else 0.0
         return self.completed / self.wall_s
 
+    def models(self) -> list[str]:
+        """Distinct request model tags, in first-seen order."""
+        seen: dict[str, None] = {}
+        for m in self.requests:
+            if m.model is not None:
+                seen.setdefault(m.model, None)
+        return list(seen)
+
+    def by_model(self) -> dict[str, dict]:
+        """Latency breakdown keyed by request model tag: the per-model
+        completed count, p50/p95 latency, and served fps over the shared
+        wall clock (what the fleet bench and the Table-VII comparison
+        report per network)."""
+        out: dict[str, dict] = {}
+        for model in self.models():
+            lats = self.latencies_ms(model)
+            out[model] = {
+                "completed": len(lats),
+                "p50_ms": round(percentile(lats, 50), 3),
+                "p95_ms": round(percentile(lats, 95), 3),
+                "requests_per_s": round(len(lats) / self.wall_s, 3)
+                if self.wall_s else float("inf"),
+            }
+        return out
+
     def summary(self) -> dict:
-        return {"completed": self.completed,
-                "wall_s": round(self.wall_s, 6),
-                "requests_per_s": round(self.requests_per_s(), 3),
-                "p50_ms": round(self.p50_ms(), 3),
-                "p95_ms": round(self.p95_ms(), 3)}
+        out = {"completed": self.completed,
+               "wall_s": round(self.wall_s, 6),
+               "requests_per_s": round(self.requests_per_s(), 3),
+               "p50_ms": round(self.p50_ms(), 3),
+               "p95_ms": round(self.p95_ms(), 3)}
+        per_model = self.by_model()
+        if per_model:
+            out["per_model"] = per_model
+        return out
 
 
 @dataclasses.dataclass
@@ -161,7 +203,14 @@ class ServeResult:
 # admission policies
 # --------------------------------------------------------------------------
 class AdmissionPolicy(Protocol):
-    """Decides, once per ``step``, how many queued requests to admit."""
+    """Decides, once per ``step``, how many queued requests to admit.
+
+    A policy may additionally define ``select(pending) -> int`` returning
+    the index of the queued request to admit next — engines that find it
+    (via :meth:`EngineBase._pop_admission`) admit out of FIFO order, which
+    is how the latency-aware policies (:class:`DeadlineAdmission`,
+    :class:`PriorityAdmission`) reorder the queue without the engines
+    knowing anything about deadlines."""
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
         """Number of requests to move from the queue into the engine.  The
@@ -188,6 +237,40 @@ class FixedRateAdmission:
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
         return max(0, min(queued, self.per_step, capacity - in_flight))
+
+
+@dataclasses.dataclass
+class DeadlineAdmission:
+    """Earliest-deadline-first: admit the queued request with the smallest
+    ``Request.deadline`` next (``None`` deadlines sort last, FIFO among
+    themselves).  Rate-wise identical to :class:`FixedRateAdmission` —
+    EDF changes *which* request enters a freed slot, not how many."""
+
+    per_step: int = 1
+
+    def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        return max(0, min(queued, self.per_step, capacity - in_flight))
+
+    def select(self, pending: Sequence[Request]) -> int:
+        return min(range(len(pending)),
+                   key=lambda i: (pending[i].deadline is None,
+                                  pending[i].deadline
+                                  if pending[i].deadline is not None
+                                  else 0.0, i))
+
+
+@dataclasses.dataclass
+class PriorityAdmission:
+    """Highest ``Request.priority`` first, FIFO within a priority class."""
+
+    per_step: int = 1
+
+    def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        return max(0, min(queued, self.per_step, capacity - in_flight))
+
+    def select(self, pending: Sequence[Request]) -> int:
+        return min(range(len(pending)),
+                   key=lambda i: (-pending[i].priority, i))
 
 
 # --------------------------------------------------------------------------
@@ -239,6 +322,11 @@ class EngineBase:
     def queued(self) -> int:
         return len(self._pending)
 
+    def pending_requests(self) -> list[Request]:
+        """Queued-but-unadmitted requests, in queue order (a read-only
+        view — the fleet scheduler inspects deadlines through this)."""
+        return [req for req, _ in self._pending]
+
     def submit(self, request: Request | Any) -> Ticket:
         """Enqueue one request; raises :class:`QueueFull` at the bound."""
         if self.max_queue is not None \
@@ -250,10 +338,26 @@ class EngineBase:
         req.rid = rid
         ticket = Ticket(rid=rid, submitted_at=time.perf_counter())
         self._metrics[rid] = RequestMetrics(rid=rid,
-                                            submitted_at=ticket.submitted_at)
+                                            submitted_at=ticket.submitted_at,
+                                            model=req.model)
         self._order.append(rid)
         self._pending.append((req, ticket))
         return ticket
+
+    def _pop_admission(self) -> tuple[Request, Ticket]:
+        """Pop the next request to admit: FIFO unless the engine's
+        admission policy orders the queue via ``select`` (EDF/priority)."""
+        select = getattr(getattr(self, "policy", None), "select", None)
+        if select is None or len(self._pending) <= 1:
+            return self._pending.popleft()
+        i = int(select([req for req, _ in self._pending]))
+        if not 0 <= i < len(self._pending):
+            raise ValueError(f"admission policy {self.policy!r} selected "
+                             f"index {i}, outside the queue "
+                             f"[0, {len(self._pending)})")
+        item = self._pending[i]
+        del self._pending[i]
+        return item
 
     def _start_clock(self) -> None:
         if self._t0 is None:
@@ -325,23 +429,33 @@ def replay(engine: Engine, requests: Sequence[Request | Any],
     """Drive ``engine`` with requests arriving at the given step indices.
 
     Requests whose arrival step has passed are submitted before each step;
-    a :class:`QueueFull` pushes the remaining submissions to later steps
-    (backpressure in action).  Returns the engine's final result once every
-    request has been submitted and served.
+    a :class:`QueueFull` pushes that request to later steps (backpressure
+    in action) but never blocks the requests behind it — against a
+    single-queue engine the distinction is moot (the queue that refused
+    request i refuses i+1 too), while against a fleet front end it is the
+    per-member isolation: one model's full queue must not starve another
+    model's traffic that arrived the same step.  Refused requests retry
+    first next step, so per-queue FIFO order is preserved.  Returns the
+    engine's final result once every request has been submitted and
+    served.
     """
     arrivals = list(arrivals) if arrivals is not None else [0] * len(requests)
     if len(arrivals) != len(requests):
         raise ValueError(f"{len(requests)} requests but "
                          f"{len(arrivals)} arrival times")
     order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+    refused: list[int] = []
     nxt, step = 0, 0
-    while nxt < len(order) or engine.has_work:
+    while nxt < len(order) or refused or engine.has_work:
+        due, refused = refused, []
         while nxt < len(order) and arrivals[order[nxt]] <= step:
-            try:
-                engine.submit(requests[order[nxt]])
-            except QueueFull:
-                break                   # retry after the next step frees room
+            due.append(order[nxt])
             nxt += 1
+        for i in due:
+            try:
+                engine.submit(requests[i])
+            except QueueFull:
+                refused.append(i)       # retry after the next step frees room
         engine.step()
         step += 1
     return engine.result()

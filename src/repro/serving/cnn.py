@@ -81,6 +81,32 @@ class DualCoreEngine(EngineBase):
     def has_work(self) -> bool:
         return bool(self._pending or self._flight)
 
+    def next_dispatch_cycles(self) -> tuple[float, float]:
+        """Predicted (c-cycles, p-cycles) the *next* ``step`` will dispatch,
+        from the per-group latency model the schedule carries
+        (``core.scheduler.Schedule.group_latencies`` of the exec schedule):
+        every in-flight stream contributes its next group's latency on
+        that group's core, plus group 0 if an admission would land.  The
+        fleet front-end reads this to co-dispatch a member whose slot is
+        conv-heavy with one whose slot is dw-heavy."""
+        lat = self.runner.plan.exec_schedule.group_latencies
+        groups = self.runner.groups
+        cyc = {"c": 0.0, "p": 0.0}
+        for f in self._flight:
+            cyc[groups[f.next_group].core] += lat[f.next_group]
+        if self._pending and len(self._flight) < self.capacity:
+            cyc[groups[0].core] += lat[0]
+        return cyc["c"], cyc["p"]
+
+    @property
+    def next_core(self) -> str | None:
+        """Core carrying the dominant share of the next step's dispatches
+        (``None`` when the engine has no work)."""
+        if not self.has_work:
+            return None
+        c, p = self.next_dispatch_cycles()
+        return "c" if c >= p else "p"
+
     # ------------------------------------------------------------------
     def _dispatch(self, f: _Flight) -> None:
         """Run flight ``f``'s next group (cross-core env hop included)."""
@@ -97,6 +123,16 @@ class DualCoreEngine(EngineBase):
 
     def step(self) -> list[Completion]:
         """Advance the pipeline by one slot (see module docstring)."""
+        return self.retire(self.advance())
+
+    def advance(self) -> list["_Flight"]:
+        """Dispatch phase of one slot: advance every in-flight stream and
+        admit into the freed group-0 slot, returning the flights that
+        cleared the last group WITHOUT materializing them.  Callers that
+        own more dispatches for the same wall-clock window (the fleet's
+        cross-engine co-dispatch) issue those first and call
+        :meth:`retire` after — the same block-last rule ``step`` applies
+        within one engine, extended across engines."""
         self._start_clock()
         finished: list[_Flight] = []
         # 1. advance in-flight streams, oldest (deepest group) first
@@ -113,7 +149,7 @@ class DualCoreEngine(EngineBase):
         n = max(0, min(n, 1, self.capacity - len(self._flight),
                        len(self._pending)))
         if n:
-            req, ticket = self._pending.popleft()
+            req, ticket = self._pop_admission()
             self._metrics[req.rid].started_at = time.perf_counter()
             f = _Flight(rid=req.rid,
                         env=self.runner._place({"h": req.payload},
@@ -126,8 +162,12 @@ class DualCoreEngine(EngineBase):
             else:
                 self._flight.append(f)
         self._slot += 1
-        # 3. retire only after every dispatch of the slot is in flight —
-        #    blocking earlier would serialize the cross-core overlap
+        return finished
+
+    def retire(self, finished: list["_Flight"]) -> list[Completion]:
+        """Materialize the outputs of flights returned by
+        :meth:`advance` — only after every dispatch of the slot is in
+        flight; blocking earlier would serialize the cross-core overlap."""
         return [self._finish(f.rid, f.env["out"]) for f in finished]
 
     # ------------------------------------------------------------------

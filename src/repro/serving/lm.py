@@ -82,6 +82,25 @@ class DualMeshEngine(EngineBase):
     def has_work(self) -> bool:
         return bool(self._pending or self._ready or self._groups)
 
+    def next_dispatch_cycles(self) -> tuple[float, float]:
+        """Predicted (c-submesh, p-submesh) work of the next ``step``, in
+        tokens (the LM analog of the CNN engine's cycle estimate): queued
+        prompts prefill on the c-submesh, active decode groups advance on
+        the p-submesh.  Units differ from the CNN engine's cycles — the
+        fleet only compares the two sides of one engine to find its
+        dominant core, never cycles across engines."""
+        c = float(sum(getattr(req.payload, "size", 1)
+                      for req, _ in self._pending))
+        p = float(sum(g.batch for g in self._groups))
+        return c, p
+
+    @property
+    def next_core(self) -> str | None:
+        if not self.has_work:
+            return None
+        c, p = self.next_dispatch_cycles()
+        return "c" if c >= p else "p"
+
     # ------------------------------------------------------------------
     def step(self) -> list[Completion]:
         """One scheduler slot (see module docstring)."""
@@ -107,7 +126,7 @@ class DualMeshEngine(EngineBase):
         n = self.policy.admit(queued=len(self._pending),
                               in_flight=self.in_flight, capacity=capacity)
         for _ in range(max(0, min(n, len(self._pending)))):
-            req, _ticket = self._pending.popleft()
+            req, _ticket = self._pop_admission()
             self._metrics[req.rid].started_at = time.perf_counter()
             st = r.new_stream(req.payload, int(req.gen_steps), rid=req.rid)
             want = st.gen_target

@@ -28,18 +28,21 @@ REPORT = {
     "measured": {
         "mobilenet_v1": {"pipelined_ms": 350.0, "sequential_ms": 360.0},
     },
+    "fleet": {"aggregate_fps": 7.0,
+              "baseline": {"best_fps": 5.0}},
 }
 
 
 def test_extract_gates_only_our_legs():
     m = extract_metrics(REPORT)
-    # shape-labelled, stable keys; baseline legs (im2col/unfused/sequential)
-    # are not gated
+    # shape-labelled, stable keys; baseline legs (im2col/unfused/sequential
+    # timings, best_fps baseline throughput) are not gated
     assert "conv_implicit_gemm/56x56x16->64 k3 s1/implicit_ms" in m
     assert "measured/mobilenet_v1/pipelined_ms" in m
-    assert len(m) == 4
+    assert "fleet/aggregate_fps" in m
+    assert len(m) == 5
     assert not any("im2col" in k or "unfused" in k or "sequential" in k
-                   for k in m)
+                   or "best_fps" in k for k in m)
 
 
 def test_identical_reports_pass():
@@ -68,6 +71,27 @@ def test_gate_tolerates_sub_threshold_noise_and_new_entries():
     assert any("disappeared" in n for n in notes)
 
 
+def test_higher_better_gate_trips_on_throughput_drop():
+    """aggregate_fps gates in the opposite direction: fresh falling below
+    baseline / threshold fails; a latency-style doubling does not."""
+    fresh = copy.deepcopy(REPORT)
+    fresh["fleet"]["aggregate_fps"] = 3.0          # 7.0 -> 3.0: > 2x drop
+    regs, _ = compare(REPORT, fresh, threshold=2.0)
+    assert [r.key for r in regs] == ["fleet/aggregate_fps"]
+    assert regs[0].ratio == pytest.approx(3.0 / 7.0)
+
+
+def test_higher_better_gate_tolerates_gains_and_noise():
+    fresh = copy.deepcopy(REPORT)
+    fresh["fleet"]["aggregate_fps"] = 14.0         # 2x GAIN: never a fail
+    regs, _ = compare(REPORT, fresh, threshold=2.0)
+    assert regs == []
+    fresh["fleet"]["aggregate_fps"] = 4.0          # 1.75x drop < threshold
+    regs, notes = compare(REPORT, fresh, threshold=2.0)
+    assert regs == []
+    assert any("higher-better" in n for n in notes)
+
+
 def test_noise_floor_skips_micro_timings():
     base = {"fused_dw_pw": [{"shape": "tiny", "fused_ms": 0.05}]}
     fresh = {"fused_dw_pw": [{"shape": "tiny", "fused_ms": 0.5}]}   # 10x!
@@ -90,7 +114,11 @@ def test_main_exit_codes(tmp_path):
 def test_committed_baselines_have_gated_entries():
     """The gate is only meaningful if the committed artifacts expose gated
     metrics — guard against silently renaming the fields."""
-    for fname in ("BENCH_kernels.json", "BENCH_dualcore.json"):
+    for fname in ("BENCH_kernels.json", "BENCH_dualcore.json",
+                  "BENCH_serving.json", "BENCH_fleet.json"):
         with open(os.path.join(REPO, fname)) as f:
             report = json.load(f)
         assert extract_metrics(report), f"{fname} has no gated entries"
+    with open(os.path.join(REPO, "BENCH_fleet.json")) as f:
+        fleet = json.load(f)
+    assert "fleet/aggregate_fps" in extract_metrics(fleet)

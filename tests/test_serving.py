@@ -88,6 +88,32 @@ def test_serve_cli_cnn_smoke(capsys):
     assert "img/s" in out and "p95" in out
 
 
+def test_serve_cli_fleet_smoke(capsys):
+    from repro.launch import serve
+    # --requests below the member count leaves a model with no tagged
+    # request; warm-up and serving must handle it (regression: the
+    # warm-up used to crash on the untrafficked member)
+    rc = serve.main(["fleet", "--models", "mbv1,sqz", "--mix", "0.7,0.3",
+                     "--requests", "1", "--batch", "1",
+                     "--image-size", "32", "--no-pallas",
+                     "--policy", "weighted_fair", "--burst", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "fleet mobilenet_v1+squeezenet" in out
+    assert "aggregate" in out and "p95" in out
+
+
+def test_serve_cli_fleet_rejects_bad_mix():
+    from repro.launch import serve
+    for argv in (["fleet", "--models", "mbv1,sqz", "--mix", "0.5"],
+                 ["fleet", "--models", "mbv1,nope"],
+                 ["fleet", "--models", "mbv1,sqz", "--mix", "0.5,abc"],
+                 ["fleet", "--models", "mbv1,sqz", "--mix", "0,1"],
+                 ["fleet", "--models", "mbv1,sqz", "--mix", "-1,2"]):
+        with pytest.raises(SystemExit):
+            serve.main(argv)
+
+
 def test_serve_cli_rejects_zero_requests():
     from repro.launch import serve
     with pytest.raises(SystemExit):

@@ -164,6 +164,7 @@ def bench_fleet(report: dict, image_size: int, requests: int,
 
     st = best_res.stats
     report["mix"] = MIX
+    report["theta"] = pool.theta        # the c/p split the pool served on
     report["fleet"] = {
         "aggregate_fps": round(fleet_fps, 2),
         "policy": st["policy"],

@@ -1,0 +1,67 @@
+"""Export executed fleet instruction streams as Chrome-tracing JSON.
+
+Takes one or more serialized streams (``repro.fleet.instructions.
+dump_stream`` documents — what ``FleetEngine.stream`` / ``MultiPoolRouter
+.stream()`` serialize to) and writes a single ``chrome://tracing`` /
+Perfetto timeline: one process row per pool, one thread track per submesh
+('c-submesh' / 'p-submesh') plus 'retire' and 'control' tracks, so
+pipeline bubbles — a submesh track idle while its sibling is busy — are
+visible directly (the first slice of the ROADMAP observability item; same
+target format as Helium's ``arm_tarmac_2_chrometracing.py``).
+
+    PYTHONPATH=src python -m benchmarks.trace_export \
+        stream_pool0.json stream_pool1.json -o trace.json
+
+``serve fleet --trace trace.json`` exports the same thing in one step,
+without the intermediate stream files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    from repro.fleet.instructions import stream_from_json
+    from repro.fleet.trace import write_chrome_trace
+
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.trace_export",
+        description="Convert serialized fleet instruction streams to "
+                    "Chrome-tracing JSON.")
+    ap.add_argument("streams", nargs="+", metavar="STREAM.json",
+                    help="stream files written by "
+                         "repro.fleet.instructions.dump_stream")
+    ap.add_argument("-o", "--out", default="trace.json",
+                    help="output trace path (default: trace.json)")
+    args = ap.parse_args(argv)
+
+    streams = {}
+    for i, path in enumerate(args.streams):
+        with open(path) as f:
+            doc = json.load(f)
+        name = doc.get("pool") or f"pool{i}"
+        if name in streams:
+            ap.error(f"two streams claim pool name {name!r} "
+                     f"({path} collides); set distinct 'pool' fields")
+        try:
+            streams[name] = stream_from_json(doc)
+        except (ValueError, KeyError, TypeError) as e:
+            ap.error(f"{path} is not a fleet instruction stream ({e}); "
+                     f"expected a repro.fleet dump_stream document")
+    n_stamped = sum(1 for recs in streams.values() for r in recs
+                    if r.t0 is not None)
+    if not n_stamped:
+        ap.error("no wall-clock-stamped records in the input streams "
+                 "(compiled-only streams carry no timings; export an "
+                 "*executed* stream)")
+    n = write_chrome_trace(streams, args.out)
+    print(f"[trace_export] {len(streams)} pool(s), {n_stamped} stamped "
+          f"records -> {n} events in {args.out} "
+          f"(open in chrome://tracing)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

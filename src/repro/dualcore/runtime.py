@@ -134,6 +134,26 @@ def build_exec_plan(program: Program, schedule: Schedule,
 # --------------------------------------------------------------------------
 # runner
 # --------------------------------------------------------------------------
+@dataclasses.dataclass
+class GroupHandle:
+    """Executable handle on one exec group: what a RUN instruction needs
+    to advance a stream one stage — the group's jitted fn bound to its
+    core's resident params, with the cross-core env hop applied when the
+    caller says which core the env currently sits on.  Handles stay valid
+    across :meth:`DualCoreRunner.relocate` (they close over the runner,
+    not over device buffers)."""
+
+    runner: "DualCoreRunner"
+    index: int
+    core: str
+
+    def __call__(self, env: Env, *, prev_core: str | None = None) -> Env:
+        r = self.runner
+        if prev_core is not None and prev_core != self.core:
+            env = r._place(env, self.core)
+        return r._fns[self.index](r._params[self.core], env)
+
+
 class DualCoreRunner:
     """Executes one CNN's schedule on the c/p submeshes, images pipelined
     with the one-slot offset of Fig.4b.
@@ -203,6 +223,35 @@ class DualCoreRunner:
         if not self._distinct:
             return env
         return jax.device_put(env, self._shard[core])
+
+    # ------------------------------------------------------------------
+    # executor-facing surface: what a RUN instruction needs
+    # ------------------------------------------------------------------
+    @property
+    def handles(self) -> list[GroupHandle]:
+        """One :class:`GroupHandle` per exec group, in chain order."""
+        return [GroupHandle(runner=self, index=i, core=g.core)
+                for i, g in enumerate(self.groups)]
+
+    def place_input(self, x) -> Env:
+        """Wrap a raw input into the env of a new stream, placed on the
+        first group's core — the admission half of a RUN."""
+        return self._place({"h": x}, self.groups[0].core)
+
+    def relocate(self, dual: DualMesh) -> None:
+        """Move this runner onto a re-split pool (the runner-side half of
+        a REBALANCE): rebuild the shardings for the new c/p submeshes and
+        re-place the resident params.  The jitted group fns are kept —
+        XLA retraces a call whose argument shardings changed, so
+        correctness is preserved and recompilation happens lazily, only
+        for groups that actually run again."""
+        self.dual = dual
+        self._distinct = dual.c_mesh is not dual.p_mesh
+        self._shard = {"c": NamedSharding(dual.c_mesh, P()),
+                       "p": NamedSharding(dual.p_mesh, P())}
+        self._params = {core: jax.device_put(self._params[core],
+                                             self._shard[core])
+                        for core in ("c", "p")}
 
     # ------------------------------------------------------------------
     def run_pipelined(self, images, record: list | None = None):

@@ -9,8 +9,22 @@ protocol over the members (interleaving core-complementary groups from
 *different* networks on the two submeshes — the multi-network Fig.4b),
 and :func:`plan_fleet` co-schedules a ``{model: qps share}`` mix through
 the §V-B design-space search (the Table VII flow).
+
+Fleet execution itself is instruction-based (DESIGN.md §11): every
+``FleetEngine.step`` lowers its scheduling decisions to RUN/FREE
+instructions (:mod:`repro.fleet.instructions`, :mod:`~.compiler`) executed
+and recorded by a :class:`PoolExecutor`; :func:`compile_fleet` lowers a
+whole run ahead of time, and :class:`MultiPoolRouter` drives N pools as
+one engine with SEND/RECV migration and REBALANCE theta re-leasing.
 """
+from repro.fleet.compiler import (SlotCompiler, compile_fleet,
+                                  stream_signature, validate_stream)
 from repro.fleet.engine import FleetEngine, Member, build_cnn_fleet
+from repro.fleet.executor import MultiPoolRouter, PoolExecutor
+from repro.fleet.instructions import (SCHEMA_VERSION, ExecRecord, Free,
+                                      Instruction, Rebalance, Recv, Run,
+                                      Send, dump_stream, load_stream,
+                                      stream_from_json, stream_to_json)
 from repro.fleet.planner import (FleetPlan, mix_schedule, normalize_mix,
                                  plan_fleet, plan_rows)
 from repro.fleet.pool import DevicePool, Lease
@@ -21,21 +35,39 @@ from repro.fleet.router import (POLICY_NAMES, DeadlineEDF, MemberView,
 __all__ = [
     "DeadlineEDF",
     "DevicePool",
+    "ExecRecord",
     "FleetEngine",
     "FleetPlan",
+    "Free",
+    "Instruction",
     "Lease",
     "Member",
     "MemberView",
+    "MultiPoolRouter",
     "POLICY_NAMES",
+    "PoolExecutor",
+    "Rebalance",
+    "Recv",
     "RoundRobin",
     "Router",
+    "Run",
+    "SCHEMA_VERSION",
     "SchedulingPolicy",
+    "Send",
     "ShortestQueue",
+    "SlotCompiler",
     "WeightedFair",
     "build_cnn_fleet",
+    "compile_fleet",
+    "dump_stream",
+    "load_stream",
     "make_policy",
     "mix_schedule",
     "normalize_mix",
     "plan_fleet",
     "plan_rows",
+    "stream_from_json",
+    "stream_signature",
+    "stream_to_json",
+    "validate_stream",
 ]

@@ -68,6 +68,8 @@ import dataclasses
 import time
 from typing import Mapping, Sequence
 
+from repro.fleet.compiler import SlotCompiler, observe
+from repro.fleet.executor import PoolExecutor
 from repro.fleet.pool import DevicePool
 from repro.fleet.router import (MemberView, RoundRobin, Router,
                                 SchedulingPolicy)
@@ -138,6 +140,11 @@ class FleetEngine(EngineBase):
         self.pool = pool
         self._slot = 0
         self._dispatches = 0
+        # execution back end: step() compiles each slot's decisions into
+        # instructions and the executor runs them (and records the
+        # executed stream — ``self.stream``); a MultiPoolRouter re-homes
+        # this executor to give it a pool name and SEND/RECV transport
+        self.executor = PoolExecutor(self)
 
     # ------------------------------------------------------------------
     @property
@@ -181,89 +188,72 @@ class FleetEngine(EngineBase):
         # head_deadline costs an O(queue) scan per member per slot and
         # next_core a walk over the in-flight groups — pay them only when
         # something reads them (a deadline-aware policy; co-dispatch
-        # ordering), not on every slot of every policy
+        # ordering), not on every slot of every policy.  The view builder
+        # itself lives in ``fleet.compiler.observe`` so the AOT compiler's
+        # member mirrors feed the policy identical inputs.
         want_deadlines = getattr(self.policy, "uses_deadlines", False)
         want_cores = self.co_dispatch is None or self.co_dispatch > 0
-        views = []
-        for i, m in enumerate(self.members):
-            e = m.engine
-            if not e.has_work:
-                continue
-            head = None
-            if want_deadlines and hasattr(e, "pending_requests"):
-                deadlines = [r.deadline for r in e.pending_requests()
-                             if r.deadline is not None]
-                head = min(deadlines) if deadlines else None
-            views.append(MemberView(
-                index=i, name=m.name, queued=e.queued,
-                in_flight=e.in_flight, weight=m.weight,
-                dispatches=m.dispatches,
-                head_deadline=head,
-                next_core=(getattr(e, "next_core", None)
-                           if want_cores else None),
-                has_work=True))
-        return views
+        views = (observe(i, m.name, m.engine, weight=m.weight,
+                         dispatches=m.dispatches,
+                         want_deadlines=want_deadlines,
+                         want_cores=want_cores)
+                 for i, m in enumerate(self.members))
+        return [v for v in views if v is not None]
 
-    def _pick(self, views: Sequence[MemberView]) -> Member:
-        i = self.policy.pick(views, self._dispatches)
-        if i not in {v.index for v in views}:
-            raise ValueError(f"policy {self.policy!r} picked member {i}, "
-                             f"not among workable "
-                             f"{sorted(v.index for v in views)}")
-        return self.members[i]
+    @property
+    def stream(self):
+        """The instruction stream executed so far (``ExecRecord`` list) —
+        serialize with ``instructions.stream_to_json``, replay with
+        ``executor.PoolExecutor.replay``."""
+        return self.executor.records
 
     def step(self) -> list[Completion]:
-        """One fleet slot: the policy's primary member dispatches first,
-        then up to ``co_dispatch`` further members, core-complementary
-        first per the latency model — all dispatches enter the submesh
-        queues before any completion materializes (module docstring
-        points 2-4)."""
+        """One fleet slot, as compile-then-execute: lower this slot's
+        scheduling decisions (policy primary first, then up to
+        ``co_dispatch`` members core-complementary-first, ``burst`` deep,
+        every RUN before any FREE — module docstring points 2-4) into
+        instructions, and replay them through the executor.  The executed
+        stream accumulates on :attr:`stream`; a stream compiled ahead of
+        time for the same arrivals replays to the same trace bitwise
+        (``compiler.compile_fleet``, tested)."""
         self._start_clock()
         views = self._views()
         if not views:
             return []
-        primary = self._pick(views)
-        batch = [primary]
-        rest = [v for v in views if v.name != primary.name]
-        if rest and (self.co_dispatch is None or self.co_dispatch > 0):
-            pv = next(v for v in views if v.name == primary.name)
-            want = "p" if pv.next_core == "c" else "c"
-            # complementary dominant core first, then member order
-            rest.sort(key=lambda v: (v.next_core != want, v.index))
-            limit = (len(rest) if self.co_dispatch is None
-                     else self.co_dispatch)
-            batch.extend(self.members[v.index] for v in rest[:limit])
-        done: list[Completion] = []
-        deferred: list[tuple[Member, list]] = []
-        opaque: list[Member] = []
-        for m in batch:                      # dispatch phase, no blocking
-            if hasattr(m.engine, "advance"):
-                flights: list = []
-                for _ in range(self.burst):
-                    if not m.engine.has_work:
-                        break
-                    flights.extend(m.engine.advance())
-                    m.dispatches += 1
-                    self._dispatches += 1
-                deferred.append((m, flights))
-            else:
-                opaque.append(m)
-        # opaque members (no advance/retire split, e.g. a DualMeshEngine)
-        # can only step() — dispatch and block fused.  Run them after all
-        # pure dispatches are in flight but before any deferrable retire,
-        # so their unavoidable block never precedes an avoidable dispatch
-        for m in opaque:
-            for _ in range(self.burst):
-                if not m.engine.has_work:
-                    break
-                done.extend(self._adopt(m, c) for c in m.engine.step())
-                m.dispatches += 1
-                self._dispatches += 1
-        for m, flights in deferred:          # retire phase
-            done.extend(self._adopt(m, c)
-                        for c in m.engine.retire(flights))
+        compiler = SlotCompiler(self.policy, co_dispatch=self.co_dispatch,
+                                burst=self.burst)
+        instrs = compiler.lower_slot(views, self._dispatches)
+        done = self.executor.execute_slot(instrs, self._slot)
         self._slot += 1
         return done
+
+    def withdraw_pending(self, max_n: int | None = None, *,
+                         member: str | None = None
+                         ) -> list[tuple[int, Request]]:
+        """Remove up to ``max_n`` queued (unadmitted) requests from the
+        member queues — all members, or just ``member`` — un-accounting
+        them at both the member and fleet boundary.  Returns
+        ``(fleet rid, request)`` pairs; the SEND instruction (cross-pool
+        migration) is the caller."""
+        names = ([member] if member is not None
+                 else [m.name for m in self.members])
+        out: list[tuple[int, Request]] = []
+        for name in names:
+            if name not in self._by_name:
+                raise KeyError(f"no member {name!r} "
+                               f"(members: {[m.name for m in self.members]})")
+            if max_n is not None and len(out) >= max_n:
+                break
+            m = self._by_name[name]
+            take = None if max_n is None else max_n - len(out)
+            for mrid, req in m.engine.withdraw_pending(take):
+                frid = m.rid_map.pop(mrid)
+                del self._metrics[frid]
+                self._order.remove(frid)
+                req.rid = None
+                req.model = name        # keep the route after migration
+                out.append((frid, req))
+        return out
 
     def _adopt(self, member: Member, c: Completion) -> Completion:
         """Re-account a member completion at the fleet boundary: fleet

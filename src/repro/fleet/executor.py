@@ -1,0 +1,555 @@
+"""Instruction-stream execution: one pool, and a router over many.
+
+:class:`PoolExecutor` is the fleet's execution back end.  It holds no
+scheduling opinion: it executes :mod:`repro.fleet.instructions` against
+one ``FleetEngine``'s members — the decisions are already in the stream.
+The live ``FleetEngine.step`` feeds it one compiled slot at a time (and
+the executor records what it ran); :meth:`PoolExecutor.replay` feeds it a
+whole pre-compiled or previously-recorded stream, reproducing the live
+run's dispatch trace and outputs bitwise (tested) with no central policy
+loop — the property that makes a pool drivable from a serialized stream
+instead of Python object references.
+
+:class:`MultiPoolRouter` is the first consumer of that property: N
+process-local pools standing in for N hosts, each wrapped in its own
+executor, presented as one engine (submit / step / drain / result).  The
+router owns only cross-pool concerns:
+
+  * placement — submit routes to the pool with the least outstanding
+    work for the request's model;
+  * migration — :meth:`migrate` / :meth:`drain_pool` move queued
+    (unadmitted) requests between pools as a SEND on the source and a
+    RECV on the destination, with request identity re-mapped at the
+    router boundary (payloads ride the router's mailbox, never the
+    serialized stream);
+  * dynamic theta re-leasing — when a pool's observed traffic mix
+    drifts past ``rebalance_drift`` (total-variation distance from the
+    mix its split was planned for), the router re-plans theta via
+    ``planner.plan_fleet`` and issues a REBALANCE, which revokes the
+    pool's leases, re-splits c/p at the new theta (Eq.10), and relocates
+    member params + in-flight envs onto the new submeshes.
+
+Per-request metrics are re-accounted at each boundary exactly as the
+fleet does to its members: latency runs from router submit to member
+completion, whichever pool finally served it.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Mapping, Sequence
+
+from repro.fleet.instructions import (ExecRecord, Free, Instruction, Recv,
+                                      Rebalance, Run, Send)
+from repro.serving.api import (Completion, EngineBase, Request,
+                               RequestMetrics, Ticket)
+
+
+class SeqCounter:
+    """A peekable monotonic counter: the next value to be issued is
+    :attr:`n`.  The router records each submission's position in the
+    instruction stream as the seq watermark at submit time — everything
+    :meth:`MultiPoolRouter.replay` needs to re-interleave submissions
+    with execution."""
+
+    def __init__(self):
+        self.n = 0
+
+    def __next__(self) -> int:
+        v = self.n
+        self.n += 1
+        return v
+
+
+class PoolExecutor:
+    """Replays instruction streams against one fleet's members.
+
+    fleet      the ``FleetEngine`` whose members (and pool) instructions
+               act on
+    name       this pool's name in a multi-pool topology (SEND/RECV peers
+               address each other by it)
+    transport  mailbox provider for SEND/RECV (a ``MultiPoolRouter``);
+               None = single-pool, migration instructions are an error
+    record     keep the executed stream in :attr:`records` (ExecRecord
+               per instruction, with observed advances + wall-clock) —
+               what serializes, replays, and exports to Chrome tracing
+    """
+
+    def __init__(self, fleet, *, name: str = "pool0", transport=None,
+                 record: bool = True):
+        self.fleet = fleet
+        self.name = name
+        self.transport = transport
+        self.records: list[ExecRecord] = []
+        self._record = record
+        self._seq = SeqCounter()          # router replaces with a shared
+        #                                   counter in multi-pool runs
+        self._held: dict[str, list] = {}  # member -> flights whose FREE
+        #                                   has not executed yet
+
+    # ------------------------------------------------------------------
+    def execute(self, instr: Instruction, slot: int) -> list[Completion]:
+        """Execute one instruction; returns the completions it
+        materialized (only FREE and fused RUN ever do)."""
+        t0 = time.perf_counter()
+        fleet = self.fleet
+        done: list[Completion] = []
+        advances = 0
+        if isinstance(instr, Run):
+            m = fleet._by_name[instr.member]
+            if instr.fused:
+                # opaque member: step() fuses dispatch and block
+                for _ in range(instr.slots):
+                    if not m.engine.has_work:
+                        break
+                    done.extend(fleet._adopt(m, c)
+                                for c in m.engine.step())
+                    m.dispatches += 1
+                    fleet._dispatches += 1
+                    advances += 1
+            else:
+                flights = self._held.setdefault(instr.member, [])
+                for _ in range(instr.slots):
+                    if not m.engine.has_work:
+                        break
+                    flights.extend(m.engine.advance())
+                    m.dispatches += 1
+                    fleet._dispatches += 1
+                    advances += 1
+        elif isinstance(instr, Free):
+            m = fleet._by_name[instr.member]
+            flights = self._held.pop(instr.member, [])
+            done.extend(fleet._adopt(m, c)
+                        for c in m.engine.retire(flights))
+        elif isinstance(instr, Send):
+            if self.transport is None:
+                raise RuntimeError(f"pool {self.name!r} executed SEND with "
+                                   f"no transport attached; migration "
+                                   f"needs a MultiPoolRouter")
+            pairs = fleet.withdraw_pending(instr.count,
+                                           member=instr.member)
+            advances = self.transport.send(self.name, instr.peer, pairs)
+        elif isinstance(instr, Recv):
+            if self.transport is None:
+                raise RuntimeError(f"pool {self.name!r} executed RECV with "
+                                   f"no transport attached")
+            advances = self.transport.recv(self.name, instr.peer,
+                                           instr.count, fleet.submit)
+        elif isinstance(instr, Rebalance):
+            self._rebalance(instr.theta)
+        else:
+            raise TypeError(f"unknown fleet instruction {instr!r}")
+        if self._record:
+            self.records.append(ExecRecord(
+                instr=instr, slot=slot, seq=next(self._seq),
+                advances=advances, t0=t0, t1=time.perf_counter()))
+        return done
+
+    def execute_slot(self, instrs: Sequence[Instruction],
+                     slot: int) -> list[Completion]:
+        """Execute one slot's instructions in order.  The compiler's
+        RUN-before-FREE ordering is what preserves the block-last rule;
+        the executor does not re-sort."""
+        done: list[Completion] = []
+        for instr in instrs:
+            done.extend(self.execute(instr, slot))
+        return done
+
+    def inject(self, instr: Instruction) -> list[Completion]:
+        """Execute one out-of-band instruction (migration, rebalance) at
+        the pool's current slot, recording it in the stream."""
+        return self.execute(instr, self.fleet._slot)
+
+    # ------------------------------------------------------------------
+    def _rebalance(self, theta: float) -> None:
+        """Revoke every lease, re-split the pool at ``theta``, re-lease,
+        and relocate members' params and in-flight envs."""
+        pool = self.fleet.pool
+        if pool is None:
+            raise RuntimeError(f"pool {self.name!r} executed REBALANCE "
+                               f"but the fleet holds no DevicePool")
+        held = pool.revoke_all()
+        dual = pool.resplit(theta)
+        for m in self.fleet.members:
+            if m.name in held:
+                pool.lease(m.name)
+            if hasattr(m.engine, "relocate"):
+                m.engine.relocate(dual)
+
+    # ------------------------------------------------------------------
+    def replay(self, records: Sequence[ExecRecord],
+               requests: Sequence[Request | object] = (),
+               arrivals: Sequence[int] | None = None):
+        """Drive the fleet from a compiled or previously-recorded stream:
+        the ``serving.api.replay`` arrival loop, with each non-empty slot
+        executed from the stream instead of asked of the policy.  Returns
+        the fleet's final ``ServeResult``.
+
+        The stream must cover the run: running out of instructions while
+        members still hold work means the stream was compiled for a
+        different request trace, and raises.
+        """
+        from repro.serving.api import QueueFull
+
+        fleet = self.fleet
+        slots: list[tuple[int, list[Instruction]]] = []
+        for r in records:
+            if slots and slots[-1][0] == r.slot:
+                slots[-1][1].append(r.instr)
+            else:
+                slots.append((r.slot, [r.instr]))
+        arrivals = (list(arrivals) if arrivals is not None
+                    else [0] * len(requests))
+        if len(arrivals) != len(requests):
+            raise ValueError(f"{len(requests)} requests but "
+                             f"{len(arrivals)} arrival times")
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        refused: list[int] = []
+        gi, nxt, step = 0, 0, 0
+        while nxt < len(order) or refused or fleet.has_work:
+            due, refused = refused, []
+            while nxt < len(order) and arrivals[order[nxt]] <= step:
+                due.append(order[nxt])
+                nxt += 1
+            for i in due:
+                try:
+                    fleet.submit(requests[i])
+                except QueueFull:
+                    refused.append(i)   # retry first next step, as replay()
+            if fleet.has_work:
+                if gi >= len(slots):
+                    raise ValueError(
+                        f"instruction stream exhausted after {gi} slots "
+                        f"with work still outstanding (queued="
+                        f"{fleet.queued}, in_flight={fleet.in_flight}); "
+                        f"was it compiled for this request trace?")
+                fleet._start_clock()
+                slot_no, instrs = slots[gi]
+                gi += 1
+                self.execute_slot(instrs, slot_no)
+                fleet._slot = slot_no + 1
+            step += 1
+        return fleet.result()
+
+
+# --------------------------------------------------------------------------
+# multi-pool serving
+# --------------------------------------------------------------------------
+class MultiPoolRouter(EngineBase):
+    """One engine surface over N pools (module docstring).
+
+    fleets           {pool name: FleetEngine}; each fleet keeps (and the
+                     router adopts) its own :class:`PoolExecutor`
+    rebalance_drift  total-variation distance between a pool's observed
+                     and planned traffic mix beyond which the router
+                     re-plans theta and issues REBALANCE (None = never)
+    rebalance_every  slots between drift checks
+    plan_evals       search budget handed to ``planner.plan_fleet`` when
+                     re-planning theta
+    """
+
+    def __init__(self, fleets: Mapping[str, object], *,
+                 rebalance_drift: float | None = None,
+                 rebalance_every: int = 16,
+                 plan_evals: int = 8):
+        super().__init__(max_queue=None)
+        if not fleets:
+            raise ValueError("a MultiPoolRouter needs at least one pool")
+        self.executors: dict[str, PoolExecutor] = {}
+        self._seq = SeqCounter()
+        for name, fleet in fleets.items():
+            ex = fleet.executor
+            ex.name = name
+            ex.transport = self
+            ex._seq = self._seq         # router-wide order across pools
+            self.executors[name] = ex
+        self.rebalance_drift = rebalance_drift
+        self.rebalance_every = rebalance_every
+        self.plan_evals = plan_evals
+        self.rebalances: list[tuple[str, float]] = []
+        self.placements: list[tuple[int, str]] = []
+        #    per submission, in order: (stream seq watermark at submit
+        #    time, pool placed on) — with the per-pool streams, the full
+        #    recipe for re-executing the run (:meth:`replay`)
+        self._sources: dict[tuple[str, int], int] = {}
+        #                    (pool, fleet rid) -> router rid
+        self._mail: dict[tuple[str, str], deque] = {}
+        #                  (src, dst) -> deque[(router rid, Request)]
+        self._served: dict[str, dict[str, int]] = {
+            name: {} for name in self.executors}
+        self._steps = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def pools(self) -> list[str]:
+        return list(self.executors)
+
+    @property
+    def in_transit(self) -> int:
+        return sum(len(box) for box in self._mail.values())
+
+    @property
+    def has_work(self) -> bool:
+        return (any(ex.fleet.has_work for ex in self.executors.values())
+                or self.in_transit > 0)
+
+    @property
+    def queued(self) -> int:
+        return (sum(ex.fleet.queued for ex in self.executors.values())
+                + self.in_transit)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(ex.fleet.in_flight for ex in self.executors.values())
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request | object) -> Ticket:
+        """Route to the pool with the least outstanding work among the
+        pools whose fleet serves the request's model."""
+        req = request if isinstance(request, Request) else Request(request)
+        cands = [(name, ex) for name, ex in self.executors.items()
+                 if req.model is None or req.model in ex.fleet.router.names]
+        if not cands:
+            served = {n: ex.fleet.router.names
+                      for n, ex in self.executors.items()}
+            raise KeyError(f"no pool serves model {req.model!r} "
+                           f"(pools serve: {served})")
+        name, _ex = min(cands,
+                        key=lambda kv: kv[1].fleet.queued
+                        + kv[1].fleet.in_flight)
+        return self._submit_to(name, req)
+
+    def _submit_to(self, pool: str, req: Request) -> Ticket:
+        """Submit into a specific pool, with router-level accounting and
+        the placement logged (seq watermark, pool) for replay."""
+        ex = self.executors[pool]
+        submitted_at = time.perf_counter()
+        ticket = ex.fleet.submit(
+            Request(payload=req.payload, gen_steps=req.gen_steps,
+                    model=req.model, deadline=req.deadline,
+                    priority=req.priority))
+        rid = self._next_rid
+        self._next_rid += 1
+        req.rid = rid
+        self._metrics[rid] = RequestMetrics(rid=rid,
+                                            submitted_at=submitted_at,
+                                            model=req.model)
+        self._order.append(rid)
+        self._sources[(pool, ticket.rid)] = rid
+        self.placements.append((self._seq.n, pool))
+        return Ticket(rid=rid, submitted_at=submitted_at)
+
+    def step(self) -> list[Completion]:
+        """One slot on every pool (each pool compiles + executes its own
+        slot), then the periodic drift check."""
+        self._start_clock()
+        done: list[Completion] = []
+        for name, ex in self.executors.items():
+            done.extend(self._adopt(name, c) for c in ex.fleet.step())
+        self._steps += 1
+        if (self.rebalance_drift is not None
+                and self._steps % self.rebalance_every == 0):
+            self._check_drift()
+        return done
+
+    def _adopt(self, pool: str, c: Completion) -> Completion:
+        """Re-account a pool completion at the router boundary (same move
+        as ``FleetEngine._adopt`` one layer down)."""
+        rid = self._sources.pop((pool, c.ticket.rid))
+        m = self._metrics[rid]
+        m.started_at = c.metrics.started_at
+        m.finished_at = c.metrics.finished_at
+        fc = Completion(ticket=Ticket(rid=rid,
+                                      submitted_at=m.submitted_at),
+                        output=c.output, metrics=m)
+        self._completions[rid] = fc
+        model = c.metrics.model or "?"
+        served = self._served[pool]
+        served[model] = served.get(model, 0) + 1
+        return fc
+
+    # ------------------------------------------------------------------
+    # migration (SEND on the source, RECV on the destination)
+    # ------------------------------------------------------------------
+    def migrate(self, src: str, dst: str, *, member: str | None = None,
+                count: int | None = None) -> int:
+        """Move up to ``count`` queued requests from pool ``src`` to pool
+        ``dst`` (None = all queued; ``member`` restricts to one model).
+        Returns the number moved."""
+        if src == dst:
+            raise ValueError(f"cannot migrate pool {src!r} to itself")
+        for name in (src, dst):
+            if name not in self.executors:
+                raise KeyError(f"unknown pool {name!r} "
+                               f"(pools: {self.pools})")
+        self.executors[src].inject(Send(peer=dst, member=member,
+                                        count=count))
+        box = self._mail.get((src, dst))
+        moved = len(box) if box else 0
+        self.executors[dst].inject(Recv(peer=src))
+        return moved
+
+    def drain_pool(self, name: str) -> int:
+        """Evacuate every queued request of pool ``name`` to the least
+        outstanding sibling (in-flight work finishes where it is; the
+        pool takes no new admissions once its queue is empty)."""
+        others = [n for n in self.executors if n != name]
+        if not others:
+            raise ValueError(f"cannot drain {name!r}: it is the only pool")
+        dst = min(others, key=lambda n: self.executors[n].fleet.queued
+                  + self.executors[n].fleet.in_flight)
+        return self.migrate(name, dst)
+
+    # transport surface used by PoolExecutor SEND/RECV ------------------
+    def send(self, src: str, dst: str, pairs) -> int:
+        if dst not in self.executors:
+            raise KeyError(f"SEND to unknown pool {dst!r} "
+                           f"(pools: {self.pools})")
+        box = self._mail.setdefault((src, dst), deque())
+        for frid, req in pairs:
+            box.append((self._sources.pop((src, frid)), req))
+        return len(pairs)
+
+    def recv(self, dst: str, src: str, count: int | None, submit) -> int:
+        box = self._mail.get((src, dst))
+        n = 0
+        while box and (count is None or n < count):
+            rid, req = box.popleft()
+            ticket = submit(req)
+            self._sources[(dst, ticket.rid)] = rid
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # dynamic theta re-leasing
+    # ------------------------------------------------------------------
+    def observed_mix(self, pool: str) -> dict[str, float]:
+        """Per-model share of the traffic pool ``pool`` has completed
+        since its last rebalance."""
+        served = self._served[pool]
+        total = sum(served.values())
+        if not total:
+            return {}
+        return {m: n / total for m, n in served.items()}
+
+    def _check_drift(self) -> None:
+        from repro.fleet.planner import normalize_mix
+
+        for name, ex in self.executors.items():
+            fleet = ex.fleet
+            if fleet.pool is None:
+                continue
+            observed = self.observed_mix(name)
+            if len(observed) < 2:       # one model (or nothing) served:
+                continue                # no mix to drift
+            planned = normalize_mix(
+                {m.name: m.weight for m in fleet.members})
+            drift = 0.5 * sum(
+                abs(observed.get(k, 0.0) - planned.get(k, 0.0))
+                for k in set(observed) | set(planned))
+            if drift > self.rebalance_drift:
+                self.rebalance(name, mix=observed)
+
+    def rebalance(self, pool: str, *, mix: Mapping[str, float],
+                  theta: float | None = None) -> float:
+        """Re-plan ``pool`` for traffic ``mix`` and issue REBALANCE.
+        ``theta`` overrides the planner (tests pin the split); the pool's
+        planned weights are reset to ``mix`` so the drift detector
+        measures against the new baseline."""
+        from repro.fleet.planner import plan_fleet
+
+        ex = self.executors[pool]
+        if theta is None:
+            theta = plan_fleet(mix, max_evals=self.plan_evals).theta
+        ex.inject(Rebalance(theta=theta))
+        for m in ex.fleet.members:
+            if m.name in mix:
+                m.weight = mix[m.name]
+        self._served[pool] = {}
+        self.rebalances.append((pool, theta))
+        return theta
+
+    # ------------------------------------------------------------------
+    def stream(self) -> list[ExecRecord]:
+        """The executed multi-pool stream, interleaved by the router-wide
+        sequence number."""
+        out = [r for ex in self.executors.values() for r in ex.records]
+        out.sort(key=lambda r: r.seq)
+        return out
+
+    def streams(self) -> dict[str, list[ExecRecord]]:
+        """Per-pool executed streams (what serializes: one
+        ``stream_to_json(records, pool=name)`` document per pool)."""
+        return {name: list(ex.records)
+                for name, ex in self.executors.items()}
+
+    def replay(self, streams: Mapping[str, Sequence[ExecRecord]],
+               placements: Sequence[tuple[int, str]],
+               requests: Sequence[Request | object]):
+        """Re-execute a recorded multi-pool run on this (fresh) router:
+        every record across every pool executes in router-wide seq order,
+        and the i-th request re-submits to its recorded pool exactly when
+        it did originally (its placement's seq watermark: before the
+        first record with seq >= watermark).  No scheduling or placement
+        decision is re-made — the streams plus the placement log ARE the
+        run — so the re-executed streams and per-request outputs are
+        bitwise-identical to the recording (tested, including runs with
+        SEND/RECV migration and mid-run REBALANCE)."""
+        unknown = set(streams) - set(self.executors)
+        if unknown:
+            raise KeyError(f"streams for unknown pools {sorted(unknown)} "
+                           f"(pools: {self.pools})")
+        if len(placements) != len(requests):
+            raise ValueError(f"{len(requests)} requests but "
+                             f"{len(placements)} placements")
+        merged = sorted(((r, pool) for pool, recs in streams.items()
+                         for r in recs), key=lambda t: t[0].seq)
+        pi = 0
+        for r, pool in merged:
+            while pi < len(placements) and placements[pi][0] <= r.seq:
+                self._submit_to(placements[pi][1], requests[pi]
+                                if isinstance(requests[pi], Request)
+                                else Request(requests[pi]))
+                pi += 1
+            ex = self.executors[pool]
+            fleet = ex.fleet
+            fleet._start_clock()
+            self._start_clock()
+            for c in ex.execute(r.instr, r.slot):
+                self._adopt(pool, c)
+            if isinstance(r.instr, (Run, Free)):
+                fleet._slot = r.slot + 1
+        for _wm, pool in placements[pi:]:   # submissions after the last
+            #                                 record (an already-idle run)
+            self._submit_to(pool, requests[pi]
+                            if isinstance(requests[pi], Request)
+                            else Request(requests[pi]))
+            pi += 1
+        if self.has_work:
+            raise ValueError(
+                f"recorded streams exhausted with work still outstanding "
+                f"(queued={self.queued}, in_flight={self.in_flight}); "
+                f"were they recorded from this request trace?")
+        return self.result()
+
+    def _extra_stats(self, metrics) -> dict:
+        per_pool = {}
+        for name, ex in self.executors.items():
+            fleet = ex.fleet
+            per_pool[name] = {
+                "slots": fleet._slot,
+                "dispatches": fleet._dispatches,
+                "served": dict(self._served[name]),
+                "queued": fleet.queued,
+                "in_flight": fleet.in_flight,
+            }
+            if fleet.pool is not None:
+                per_pool[name]["pool"] = fleet.pool.stats()
+        return {"engine": "multipool",
+                "pools": per_pool,
+                "steps": self._steps,
+                "rebalances": [{"pool": p, "theta": round(t, 4)}
+                               for p, t in self.rebalances],
+                "in_transit": self.in_transit,
+                "aggregate_fps": metrics.requests_per_s(),
+                "per_model": metrics.by_model()}

@@ -1,0 +1,192 @@
+"""Fleet instruction set: the serializable form of fleet execution.
+
+PR 5's ``FleetEngine.step`` was an imperative Python walk over member
+engines — the scheduling decisions (policy pick, core-complementary
+co-dispatch ordering, burst) and their execution (advance / step / retire
+calls) were fused in one loop, so per-pool state was unserializable and a
+router could not drive pools it does not hold Python references to.  This
+module is the cut point: every cross-engine decision lowers to one of five
+instructions (the ``decentralized_distributed_runtime`` idiom from alpa,
+SNIPPETS.md §3, and the same compile-the-schedule-then-replay move the
+paper's own overlay ISA makes in ``core/isa.py``):
+
+  RUN        advance one member's exec-group pipeline up to ``slots``
+             consecutive scheduler slots on its submesh (``fused`` marks
+             members without the advance/retire split, whose step() blocks)
+  FREE       materialize + release the member's finished in-flight slots
+             (the block-last rule: every RUN of a slot precedes any FREE)
+  SEND       emit ``count`` queued requests of one member out of this pool
+             toward a peer pool (cross-pool migration / drain)
+  RECV       accept requests a peer SENT and enqueue them on the member
+  REBALANCE  re-split this pool's c/p submeshes at a new theta (dynamic
+             re-leasing when the observed traffic mix drifts)
+
+Instructions are plain frozen dataclasses, JSON-serializable under a
+versioned schema (:data:`SCHEMA_VERSION`); :class:`ExecRecord` wraps one
+executed instruction with its observed slot, sequence number, advance
+count and wall-clock window — the executed stream is what round-trips
+through JSON (``stream_to_json`` / ``stream_from_json``), replays through
+``fleet.executor.PoolExecutor.replay``, and exports to Chrome tracing
+(``benchmarks/trace_export.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+SCHEMA_VERSION = 1
+
+OPS = ("RUN", "FREE", "SEND", "RECV", "REBALANCE")
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    """Advance ``member``'s pipeline up to ``slots`` consecutive scheduler
+    slots.  ``core`` is the predicted dominant submesh of the dispatch
+    ('c' | 'p' | None when the compiler did not price it); ``primary``
+    marks the scheduling policy's pick for the slot; ``fused`` marks an
+    opaque member whose step() fuses dispatch and block (it must execute
+    after every pure dispatch of the slot)."""
+
+    member: str
+    slots: int = 1
+    core: str | None = None
+    primary: bool = False
+    fused: bool = False
+
+    op = "RUN"
+
+
+@dataclasses.dataclass(frozen=True)
+class Free:
+    """Materialize the outputs of ``member``'s finished streams and free
+    their pipeline slots.  FREEs trail every RUN of the slot — blocking
+    earlier would serialize exactly the cross-network overlap the fleet
+    exists for."""
+
+    member: str
+
+    op = "FREE"
+
+
+@dataclasses.dataclass(frozen=True)
+class Send:
+    """Withdraw up to ``count`` queued (unadmitted) requests of ``member``
+    from this pool and hand them to pool ``peer`` (None member = every
+    member).  The matching :class:`Recv` executes on the peer; the router
+    carries the payloads through its mailbox — payloads never appear in
+    the serialized stream."""
+
+    peer: str
+    member: str | None = None
+    count: int | None = None
+
+    op = "SEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class Recv:
+    """Enqueue the requests pool ``peer`` SENT onto this pool's members
+    (each request carries its model tag; ``count`` is the observed number
+    accepted, stamped by the executor)."""
+
+    peer: str
+    count: int | None = None
+
+    op = "RECV"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rebalance:
+    """Re-split this pool's c/p submeshes at ``theta`` (Eq.10): revoke
+    every lease, re-lease the new split, and relocate members' params and
+    in-flight envs onto it."""
+
+    theta: float
+
+    op = "REBALANCE"
+
+
+Instruction = Run | Free | Send | Recv | Rebalance
+
+_OP_TYPES = {"RUN": Run, "FREE": Free, "SEND": Send, "RECV": Recv,
+             "REBALANCE": Rebalance}
+
+
+@dataclasses.dataclass
+class ExecRecord:
+    """One executed instruction: the instruction plus what execution
+    observed — the fleet slot it ran in, a router-wide sequence number
+    (replay interleaves multi-pool streams by it), how many scheduler
+    slots a RUN actually advanced (burst truncates at an empty pipeline),
+    and the wall-clock window (perf_counter seconds) for trace export."""
+
+    instr: Instruction
+    slot: int
+    seq: int = 0
+    advances: int = 0
+    t0: float | None = None
+    t1: float | None = None
+
+
+def instr_to_dict(instr: Instruction) -> dict:
+    d = {"op": instr.op}
+    d.update(dataclasses.asdict(instr))
+    return d
+
+
+def instr_from_dict(d: dict) -> Instruction:
+    d = dict(d)
+    op = d.pop("op", None)
+    if op not in _OP_TYPES:
+        raise ValueError(f"unknown fleet instruction op {op!r}; "
+                         f"one of {OPS}")
+    cls = _OP_TYPES[op]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(f"{op} instruction has unknown fields "
+                         f"{sorted(unknown)} (schema drift? expected "
+                         f"{sorted(fields)})")
+    return cls(**d)
+
+
+def stream_to_json(records: Sequence[ExecRecord], *,
+                   pool: str | None = None) -> dict:
+    """Serialize an executed (or compiled) stream.  Compiled-only records
+    carry ``t0``/``t1`` = None; both forms round-trip."""
+    return {
+        "version": SCHEMA_VERSION,
+        "pool": pool,
+        "records": [{
+            "instr": instr_to_dict(r.instr),
+            "slot": r.slot,
+            "seq": r.seq,
+            "advances": r.advances,
+            "t0": r.t0,
+            "t1": r.t1,
+        } for r in records],
+    }
+
+
+def stream_from_json(doc: dict) -> list[ExecRecord]:
+    version = doc.get("version")
+    if version != SCHEMA_VERSION:
+        raise ValueError(f"fleet instruction stream schema version "
+                         f"{version!r} != supported {SCHEMA_VERSION}")
+    return [ExecRecord(instr=instr_from_dict(r["instr"]), slot=r["slot"],
+                       seq=r.get("seq", 0), advances=r.get("advances", 0),
+                       t0=r.get("t0"), t1=r.get("t1"))
+            for r in doc["records"]]
+
+
+def dump_stream(records: Sequence[ExecRecord], path: str, *,
+                pool: str | None = None) -> None:
+    with open(path, "w") as f:
+        json.dump(stream_to_json(records, pool=pool), f, indent=1)
+
+
+def load_stream(path: str) -> list[ExecRecord]:
+    with open(path) as f:
+        return stream_from_json(json.load(f))

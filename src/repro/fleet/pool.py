@@ -81,6 +81,28 @@ class DevicePool:
                            f"(held: {sorted(self._leases)})")
         del self._leases[name]
 
+    def revoke_all(self) -> list[str]:
+        """Forcibly drop every lease (the pool-side half of a REBALANCE:
+        the old split is about to stop existing, so no holder may keep
+        dispatching onto it).  Returns the revoked names so the caller
+        can re-lease and relocate each holder onto the new split."""
+        revoked = sorted(self._leases)
+        self._leases.clear()
+        return revoked
+
+    def resplit(self, theta: float) -> DualMesh:
+        """Re-split the pool's c/p submeshes at a new ``theta`` (Eq.10).
+        Refuses while leases are held — ``revoke_all`` first: engines
+        holding the old ``DualMesh`` must relocate, not silently keep
+        dispatching onto a split the pool no longer owns."""
+        if self._leases:
+            raise RuntimeError(f"resplit with leases held "
+                               f"({sorted(self._leases)}); revoke_all() "
+                               f"first and relocate the holders")
+        self.theta = theta
+        self.dual = split_mesh(self.devices, theta)
+        return self.dual
+
     def stats(self) -> dict:
         return {"devices": len(self.devices),
                 "theta": self.dual.theta,

@@ -53,6 +53,9 @@ class MemberView:
     head_deadline: float | None     # earliest deadline among queued reqs
     next_core: str | None           # 'c' | 'p' dominant core next step
     has_work: bool
+    batched: bool = True            # has the advance/retire split (a RUN
+    #                                 can defer its FREE); False = opaque,
+    #                                 step() fuses dispatch and block
 
     @property
     def outstanding(self) -> int:

@@ -1,0 +1,100 @@
+"""Chrome-tracing export of executed fleet instruction streams.
+
+Converts :class:`~repro.fleet.instructions.ExecRecord` streams into the
+Chrome trace-event JSON format (the ``chrome://tracing`` / Perfetto
+timeline — same target format as the Helium repo's tarmac converter):
+one *process* row per pool, one *thread* track per submesh within it
+('c-submesh', 'p-submesh'), plus a 'retire' track for FREEs and a
+'control' track for SEND/RECV/REBALANCE — so pipeline bubbles (a submesh
+track with a gap while the other is busy) are visible at a glance.
+
+Only executed records carry wall-clock stamps; compiled-only records
+(``t0 is None``) are skipped.  Timestamps are re-based to the earliest
+``t0`` across every stream so the trace starts at 0.
+"""
+from __future__ import annotations
+
+import json
+from typing import Mapping, Sequence
+
+from repro.fleet.instructions import (ExecRecord, Free, Rebalance, Recv,
+                                      Run, Send)
+
+# track (tid) layout within each pool's process row; lower sorts first
+_TRACKS = ("c-submesh", "p-submesh", "retire", "control")
+
+
+def _track(instr) -> str:
+    if isinstance(instr, Run):
+        return {"c": "c-submesh", "p": "p-submesh"}.get(instr.core,
+                                                        "control")
+    if isinstance(instr, Free):
+        return "retire"
+    return "control"
+
+
+def _label(instr, advances: int) -> str:
+    if isinstance(instr, Run):
+        tag = " primary" if instr.primary else ""
+        fused = " fused" if instr.fused else ""
+        return f"RUN {instr.member} x{advances}{tag}{fused}"
+    if isinstance(instr, Free):
+        return f"FREE {instr.member}"
+    if isinstance(instr, Send):
+        whom = instr.member or "*"
+        return f"SEND {whom} -> {instr.peer} x{advances}"
+    if isinstance(instr, Recv):
+        return f"RECV <- {instr.peer} x{advances}"
+    if isinstance(instr, Rebalance):
+        return f"REBALANCE theta={instr.theta:.2f}"
+    return type(instr).__name__
+
+
+def chrome_trace(streams: Mapping[str, Sequence[ExecRecord]]) -> dict:
+    """``{pool name: records}`` -> a Chrome trace-event document.
+
+    Every executed record becomes one complete ('X') event: ``ts``/``dur``
+    in microseconds from the records' wall-clock window, filed under its
+    pool's process and its submesh's thread, with slot / seq / advances
+    in ``args`` for the details pane.
+    """
+    stamped = [r for recs in streams.values() for r in recs
+               if r.t0 is not None and r.t1 is not None]
+    base = min((r.t0 for r in stamped), default=0.0)
+    events: list[dict] = []
+    for pid, (pool, records) in enumerate(sorted(streams.items())):
+        events.append({"ph": "M", "pid": pid, "tid": 0,
+                       "name": "process_name",
+                       "args": {"name": pool}})
+        for tid, track in enumerate(_TRACKS):
+            events.append({"ph": "M", "pid": pid, "tid": tid,
+                           "name": "thread_name",
+                           "args": {"name": track}})
+            events.append({"ph": "M", "pid": pid, "tid": tid,
+                           "name": "thread_sort_index",
+                           "args": {"sort_index": tid}})
+        for r in records:
+            if r.t0 is None or r.t1 is None:
+                continue
+            events.append({
+                "ph": "X",
+                "pid": pid,
+                "tid": _TRACKS.index(_track(r.instr)),
+                "name": _label(r.instr, r.advances),
+                "cat": r.instr.op,
+                "ts": (r.t0 - base) * 1e6,
+                # sub-resolution slices still need nonzero width to render
+                "dur": max((r.t1 - r.t0) * 1e6, 0.05),
+                "args": {"slot": r.slot, "seq": r.seq,
+                         "advances": r.advances},
+            })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(streams: Mapping[str, Sequence[ExecRecord]],
+                       path: str) -> int:
+    """Write :func:`chrome_trace` to ``path``; returns the event count."""
+    doc = chrome_trace(streams)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return len(doc["traceEvents"])

@@ -38,7 +38,8 @@ Fleet (several CNNs multiplexed over one device pool, DESIGN.md §10):
   PYTHONPATH=src python -m repro.launch.serve fleet \
       --models mbv1,mbv2,squeezenet --mix 0.4,0.35,0.25 --requests 9 \
       [--policy weighted_fair] [--plan] [--scheme balanced] [--no-pallas] \
-      [--no-interleave] [--image-size 64] [--arrival-rate] [--max-queue]
+      [--no-interleave] [--image-size 64] [--arrival-rate] [--max-queue] \
+      [--pools 2] [--trace trace.json]
 
   One ``DevicePool`` leases the shared c/p split to a ``DualCoreEngine``
   per model; requests tagged per the traffic mix stream through the
@@ -50,6 +51,12 @@ Fleet (several CNNs multiplexed over one device pool, DESIGN.md §10):
   runs the §V-B co-scheduling search over the mix and serves under the
   planned PE config, printing the predicted Table-VII-style throughput
   next to the measured one.  Prints aggregate fps and per-model p50/p95.
+
+  ``--pools N`` stands up N process-local pools (one fleet each) behind a
+  ``MultiPoolRouter`` — requests place onto the least outstanding pool,
+  and the executed per-pool instruction streams interleave by router
+  sequence number.  ``--trace PATH`` exports the executed stream as
+  Chrome-tracing JSON (one track per submesh per pool).
 """
 from __future__ import annotations
 
@@ -70,6 +77,13 @@ CNN_SCHEMES = ("layer_type", "greedy", "round_robin", "balanced", "best")
 MODEL_ALIASES = {"mbv1": "mobilenet_v1", "mbv2": "mobilenet_v2",
                  "sqz": "squeezenet",
                  **{m: m for m in CNN_MODELS}}
+
+
+def _fail(msg: str) -> None:
+    """CLI usage error: clear one-line message on stderr, exit code 2
+    (argparse's convention for bad arguments) — never a raw traceback."""
+    print(f"repro.launch.serve: error: {msg}", file=sys.stderr)
+    raise SystemExit(2)
 
 
 def _arrivals(n: int, rate: float) -> list[int]:
@@ -139,91 +153,139 @@ def serve_cnn(args) -> int:
 
 
 def _parse_fleet_mix(args) -> dict[str, float]:
-    """--models/--mix -> normalized {model: share} (aliases expanded)."""
+    """--models/--mix -> normalized {model: share} (aliases expanded).
+    Malformed values are usage errors: message + exit 2 via :func:`_fail`,
+    not a traceback."""
     names = []
     for tok in args.models.split(","):
         tok = tok.strip()
         if tok not in MODEL_ALIASES:
-            raise SystemExit(f"unknown model {tok!r}; one of "
-                             f"{sorted(MODEL_ALIASES)}")
+            _fail(f"unknown model {tok!r} in --models; one of "
+                  f"{sorted(MODEL_ALIASES)}")
         names.append(MODEL_ALIASES[tok])
     if len(set(names)) != len(names):
-        raise SystemExit(f"duplicate models in --models: {names}")
+        _fail(f"duplicate models in --models: {names}")
     if args.mix is None:
         shares = [1.0] * len(names)
     else:
         try:
             shares = [float(t) for t in args.mix.split(",")]
         except ValueError:
-            raise SystemExit(f"--mix must be comma-separated numbers "
-                             f"(got {args.mix!r})") from None
+            _fail(f"--mix must be comma-separated numbers "
+                  f"(got {args.mix!r})")
         if len(shares) != len(names):
-            raise SystemExit(f"{len(names)} models but {len(shares)} "
-                             f"mix shares")
+            _fail(f"{len(names)} models in --models but {len(shares)} "
+                  f"shares in --mix")
     from repro.fleet import normalize_mix
 
     try:
         return normalize_mix(dict(zip(names, shares)))
     except ValueError as e:
-        raise SystemExit(str(e)) from None
+        _fail(str(e))
 
 
 def serve_fleet(args) -> int:
-    """``fleet`` subcommand: multi-network serving over one device pool."""
-    from repro.fleet import (build_cnn_fleet, make_policy, mix_schedule,
-                             plan_fleet, plan_rows)
+    """``fleet`` subcommand: multi-network serving over one device pool —
+    or over ``--pools N`` process-local pools (hosts stand-in) behind a
+    ``MultiPoolRouter``, each pool replaying its own compiled instruction
+    stream."""
+    from repro.fleet import (MultiPoolRouter, build_cnn_fleet, make_policy,
+                             mix_schedule, plan_fleet, plan_rows)
 
     mix = _parse_fleet_mix(args)
+    if args.pools < 1:
+        _fail(f"--pools must be >= 1, got {args.pools}")
     plan = None
     if args.plan:
         plan = plan_fleet(mix, max_evals=args.plan_evals)
         print(f"[serve] fleet plan: config={plan.config} "
               f"theta={plan.theta:.2f} predicted aggregate "
               f"{plan.aggregate_fps:.1f} fps")
-    engine, pool = build_cnn_fleet(
-        list(mix), plan=plan, scheme=args.scheme,
-        use_pallas=not args.no_pallas, policy=make_policy(args.policy),
-        weights=mix, max_queue=args.max_queue,
-        co_dispatch=0 if args.no_interleave else args.co_dispatch,
-        burst=args.burst)
+
+    def build():
+        return build_cnn_fleet(
+            list(mix), plan=plan, scheme=args.scheme,
+            use_pallas=not args.no_pallas, policy=make_policy(args.policy),
+            weights=mix, max_queue=args.max_queue,
+            co_dispatch=0 if args.no_interleave else args.co_dispatch,
+            burst=args.burst)
+
     n = args.requests
     tags = mix_schedule(mix, n)
     keys = jax.random.split(jax.random.PRNGKey(0), n)
     images = [jax.random.normal(k, (args.batch, args.image_size,
                                     args.image_size, 3)) for k in keys]
-    for m in engine.members:             # warm each member's per-group jits
-        # any image warms a member — a skewed mix or --requests < number
-        # of models can leave a member with no tagged request at all
-        m.engine.runner.run_sequential(images[:1])
+    requests = [Request(x, model=t) for x, t in zip(images, tags)]
+    arrivals = _arrivals(n, args.arrival_rate)
 
-    s = pool.stats()
-    print(f"[serve] fleet {'+'.join(mix)} policy={args.policy} "
-          f"({s['c_chips']}c+{s['p_chips']}p devices"
-          + (", degenerate: both submeshes alias one device"
-             if s["degenerate"] else "") + ")")
-    res = replay(engine, [Request(x, model=t)
-                          for x, t in zip(images, tags)],
-                 _arrivals(n, args.arrival_rate))
-    st = res.stats
-    print(f"[serve] streamed {n} request(s) in {st['slots']} fleet slots "
-          f"({st['dispatches']} member dispatches): "
-          f"{st['wall_s']*1e3:.0f} ms, aggregate "
-          f"{st['aggregate_fps']:.2f} fps")
-    for name, pm in st["per_model"].items():
-        d = st["per_member"][name]
-        print(f"  {name:<14} {pm['completed']} done "
-              f"({d['dispatches']} dispatches)  "
-              f"p50 {pm['p50_ms']:.1f} ms  p95 {pm['p95_ms']:.1f} ms  "
-              f"{pm['requests_per_s']:.2f} fps")
-    if plan is not None:
-        measured = {m: v["requests_per_s"]
-                    for m, v in st["per_model"].items()}
-        print("[serve] predicted (Table-VII-style) vs measured fps:")
-        for name, share, fps, pred, meas in plan_rows(
-                plan, measured, st["aggregate_fps"]):
-            print(f"  {name:<14} share={share:.2f} model-side={fps:8.1f} "
-                  f"predicted={pred:8.1f} measured="
-                  + (f"{meas:8.2f}" if meas is not None else "     n/a"))
+    if args.pools == 1:
+        engine, pool = build()
+        for m in engine.members:         # warm each member's per-group jits
+            # any image warms a member — a skewed mix or --requests <
+            # number of models can leave a member with no tagged request
+            m.engine.runner.run_sequential(images[:1])
+        s = pool.stats()
+        print(f"[serve] fleet {'+'.join(mix)} policy={args.policy} "
+              f"({s['c_chips']}c+{s['p_chips']}p devices"
+              + (", degenerate: both submeshes alias one device"
+                 if s["degenerate"] else "") + ")")
+        res = replay(engine, requests, arrivals)
+        st = res.stats
+        print(f"[serve] streamed {n} request(s) in {st['slots']} fleet "
+              f"slots ({st['dispatches']} member dispatches): "
+              f"{st['wall_s']*1e3:.0f} ms, aggregate "
+              f"{st['aggregate_fps']:.2f} fps")
+        for name, pm in st["per_model"].items():
+            d = st["per_member"][name]
+            print(f"  {name:<14} {pm['completed']} done "
+                  f"({d['dispatches']} dispatches)  "
+                  f"p50 {pm['p50_ms']:.1f} ms  p95 {pm['p95_ms']:.1f} ms  "
+                  f"{pm['requests_per_s']:.2f} fps")
+        if plan is not None:
+            measured = {m: v["requests_per_s"]
+                        for m, v in st["per_model"].items()}
+            print("[serve] predicted (Table-VII-style) vs measured fps:")
+            for name, share, fps, pred, meas in plan_rows(
+                    plan, measured, st["aggregate_fps"]):
+                print(f"  {name:<14} share={share:.2f} "
+                      f"model-side={fps:8.1f} predicted={pred:8.1f} "
+                      f"measured="
+                      + (f"{meas:8.2f}" if meas is not None else "     n/a"))
+        streams = {"pool0": engine.stream}
+    else:
+        fleets = {f"pool{p}": build()[0] for p in range(args.pools)}
+        router = MultiPoolRouter(fleets)
+        for fleet_engine in fleets.values():
+            for m in fleet_engine.members:
+                m.engine.runner.run_sequential(images[:1])
+        print(f"[serve] fleet {'+'.join(mix)} x {args.pools} pools "
+              f"policy={args.policy} (requests placed on the least "
+              f"outstanding pool)")
+        res = replay(router, requests, arrivals)
+        st = res.stats
+        print(f"[serve] streamed {n} request(s) over {args.pools} pools "
+              f"in {st['steps']} router steps: {st['wall_s']*1e3:.0f} ms, "
+              f"aggregate {st['aggregate_fps']:.2f} fps")
+        for pname, pp in st["pools"].items():
+            served = ", ".join(f"{m}:{c}" for m, c in pp["served"].items())
+            print(f"  {pname:<8} {pp['slots']} slots "
+                  f"{pp['dispatches']} dispatches  served {served or '-'}")
+        for name, pm in st["per_model"].items():
+            print(f"  {name:<14} {pm['completed']} done  "
+                  f"p50 {pm['p50_ms']:.1f} ms  p95 {pm['p95_ms']:.1f} ms  "
+                  f"{pm['requests_per_s']:.2f} fps")
+        streams = {name: ex.records
+                   for name, ex in router.executors.items()}
+    if args.trace:
+        import json
+
+        from repro.fleet.trace import chrome_trace
+
+        doc = chrome_trace(streams)
+        with open(args.trace, "w") as f:
+            json.dump(doc, f)
+        print(f"[serve] wrote {len(doc['traceEvents'])} trace events to "
+              f"{args.trace} (open in chrome://tracing)")
     return 0
 
 
@@ -362,6 +424,15 @@ def main(argv=None):
                        help="disable co-dispatch entirely (same as "
                             "--co-dispatch 0): one policy-picked member "
                             "per slot")
+    fleet.add_argument("--pools", type=int, default=1,
+                       help="process-local device pools (hosts stand-in); "
+                            "> 1 serves through a MultiPoolRouter that "
+                            "places requests on the least outstanding "
+                            "pool")
+    fleet.add_argument("--trace", default=None, metavar="PATH",
+                       help="write the executed instruction stream as "
+                            "Chrome-tracing JSON to PATH (one track per "
+                            "submesh per pool; open in chrome://tracing)")
     _add_common(fleet)
     fleet.set_defaults(func=serve_fleet)
 

@@ -161,25 +161,31 @@ class Metrics:
         """Latency breakdown keyed by request model tag: the per-model
         completed count, p50/p95 latency, and served fps over the shared
         wall clock (what the fleet bench and the Table-VII comparison
-        report per network)."""
+        report per network).  Zero completions / zero wall clock yield
+        None / 0.0, not NaN / inf — these dicts land in BENCH JSONs,
+        which must stay valid JSON."""
         out: dict[str, dict] = {}
         for model in self.models():
             lats = self.latencies_ms(model)
             out[model] = {
                 "completed": len(lats),
-                "p50_ms": round(percentile(lats, 50), 3),
-                "p95_ms": round(percentile(lats, 95), 3),
+                "p50_ms": round(percentile(lats, 50), 3) if lats else None,
+                "p95_ms": round(percentile(lats, 95), 3) if lats else None,
                 "requests_per_s": round(len(lats) / self.wall_s, 3)
-                if self.wall_s else float("inf"),
+                if self.wall_s else 0.0,
             }
         return out
 
     def summary(self) -> dict:
+        """Aggregate snapshot, JSON-safe in the zero-completions case
+        (empty percentiles report None, an unstarted clock 0.0)."""
+        lats = self.latencies_ms()
         out = {"completed": self.completed,
                "wall_s": round(self.wall_s, 6),
-               "requests_per_s": round(self.requests_per_s(), 3),
-               "p50_ms": round(self.p50_ms(), 3),
-               "p95_ms": round(self.p95_ms(), 3)}
+               "requests_per_s": round(len(lats) / self.wall_s, 3)
+               if self.wall_s else 0.0,
+               "p50_ms": round(percentile(lats, 50), 3) if lats else None,
+               "p95_ms": round(percentile(lats, 95), 3) if lats else None}
         per_model = self.by_model()
         if per_model:
             out["per_model"] = per_model
@@ -358,6 +364,26 @@ class EngineBase:
         item = self._pending[i]
         del self._pending[i]
         return item
+
+    def withdraw_pending(self, max_n: int | None = None
+                         ) -> list[tuple[int, Request]]:
+        """Remove up to ``max_n`` queued (unadmitted) requests — newest
+        first, so the longest-waiting requests keep their place — and
+        un-account them (their rids vanish from the metrics and the
+        submission order; the tickets are dead).  Returned pairs are in
+        original queue order, ready for re-submission elsewhere: this is
+        the executor-facing hook behind the SEND instruction (cross-pool
+        migration).  In-flight work is never withdrawn — it finishes
+        where it was dispatched."""
+        n = (len(self._pending) if max_n is None
+             else max(0, min(max_n, len(self._pending))))
+        taken = [self._pending.pop() for _ in range(n)][::-1]
+        out: list[tuple[int, Request]] = []
+        for req, _ticket in taken:
+            del self._metrics[req.rid]
+            self._order.remove(req.rid)
+            out.append((req.rid, req))
+        return out
 
     def _start_clock(self) -> None:
         if self._t0 is None:

@@ -68,6 +68,7 @@ class DualCoreEngine(EngineBase):
         self.runner = runner
         self.policy = policy or FixedRateAdmission(1)
         self.capacity = len(runner.groups)
+        self._handles = runner.handles
         self._record = record
         self._flight: list[_Flight] = []      # admission order: oldest first
         self._slot = 0
@@ -109,17 +110,26 @@ class DualCoreEngine(EngineBase):
 
     # ------------------------------------------------------------------
     def _dispatch(self, f: _Flight) -> None:
-        """Run flight ``f``'s next group (cross-core env hop included)."""
+        """Run flight ``f``'s next group via the runner's group handle
+        (cross-core env hop included)."""
         gi = f.next_group
-        groups = self.runner.groups
-        env = f.env
-        if gi > 0 and groups[gi].core != groups[gi - 1].core:
-            env = self.runner._place(env, groups[gi].core)
-        f.env = self.runner._fns[gi](self.runner._params[groups[gi].core],
-                                     env)
+        h = self._handles[gi]
+        f.env = h(f.env, prev_core=self._handles[gi - 1].core
+                  if gi > 0 else None)
         if self._record is not None:
-            self._record.append((self._slot, f.rid, gi, groups[gi].core))
+            self._record.append((self._slot, f.rid, gi, h.core))
         f.next_group = gi + 1
+
+    def relocate(self, dual) -> None:
+        """Move the engine onto a re-split pool (REBALANCE): relocate the
+        runner's params/shardings, then re-place every in-flight env on
+        its next group's core — a stream mid-chain resumes on the new
+        submeshes without losing its position."""
+        self.runner.relocate(dual)
+        self._handles = self.runner.handles
+        for f in self._flight:
+            f.env = self.runner._place(f.env,
+                                       self._handles[f.next_group].core)
 
     def step(self) -> list[Completion]:
         """Advance the pipeline by one slot (see module docstring)."""
@@ -152,8 +162,7 @@ class DualCoreEngine(EngineBase):
             req, ticket = self._pop_admission()
             self._metrics[req.rid].started_at = time.perf_counter()
             f = _Flight(rid=req.rid,
-                        env=self.runner._place({"h": req.payload},
-                                               self.runner.groups[0].core),
+                        env=self.runner.place_input(req.payload),
                         next_group=0, ticket=ticket,
                         metrics=self._metrics[req.rid])
             self._dispatch(f)

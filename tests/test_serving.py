@@ -103,15 +103,49 @@ def test_serve_cli_fleet_smoke(capsys):
     assert "aggregate" in out and "p95" in out
 
 
-def test_serve_cli_fleet_rejects_bad_mix():
+def test_serve_cli_fleet_rejects_bad_mix(capsys):
     from repro.launch import serve
+    # usage errors must exit 2 (argparse's convention) with a one-line
+    # message on stderr — never a traceback
     for argv in (["fleet", "--models", "mbv1,sqz", "--mix", "0.5"],
                  ["fleet", "--models", "mbv1,nope"],
                  ["fleet", "--models", "mbv1,sqz", "--mix", "0.5,abc"],
                  ["fleet", "--models", "mbv1,sqz", "--mix", "0,1"],
-                 ["fleet", "--models", "mbv1,sqz", "--mix", "-1,2"]):
-        with pytest.raises(SystemExit):
+                 ["fleet", "--models", "mbv1,sqz", "--mix", "-1,2"],
+                 ["fleet", "--models", "mbv1,sqz", "--pools", "0"]):
+        with pytest.raises(SystemExit) as ei:
             serve.main(argv)
+        assert ei.value.code == 2, argv
+        assert "error" in capsys.readouterr().err
+
+
+def test_serve_cli_fleet_rejects_unknown_policy(capsys):
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as ei:
+        serve.main(["fleet", "--models", "mbv1,sqz", "--policy", "nope"])
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "--policy" in err and "nope" in err
+
+
+def test_serve_cli_fleet_multipool_with_trace(tmp_path, capsys):
+    import json
+
+    from repro.launch import serve
+    trace = tmp_path / "trace.json"
+    rc = serve.main(["fleet", "--models", "mbv1,sqz", "--requests", "4",
+                     "--batch", "1", "--image-size", "32", "--no-pallas",
+                     "--pools", "2", "--trace", str(trace)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "over 2 pools" in out and "aggregate" in out
+    assert "trace events" in out
+    with open(trace) as f:
+        doc = json.load(f)
+    pools = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert pools == {"pool0", "pool1"}
+    assert any(e["ph"] == "X" for e in doc["traceEvents"])
 
 
 def test_serve_cli_rejects_zero_requests():

@@ -5,9 +5,11 @@ Gated metrics are the wall-clock fields this repo's perf story is built on
 (``implicit_ms`` / ``fused_ms`` from ``BENCH_kernels.json``,
 ``pipelined_ms`` from ``BENCH_dualcore.json``, ``p50_ms`` / ``p95_ms``
 request latencies from ``BENCH_serving.json`` / ``BENCH_fleet.json``),
-plus one higher-is-better field: ``aggregate_fps`` from
-``BENCH_fleet.json`` (the multi-network throughput claim), which fails
-when fresh drops below baseline / threshold.  Baseline-leg timings
+plus two higher-is-better fields: ``aggregate_fps`` from
+``BENCH_fleet.json`` (the multi-network throughput claim) and
+``goodput_fps`` from ``BENCH_chaos.json`` (in-SLO throughput under
+injected faults), which fail when fresh drops below baseline /
+threshold.  Baseline-leg timings
 (im2col, unfused, sequential) and the remaining throughput fields (fps,
 tokens/s) are deliberately *not* gated — a slower baseline is not a
 regression.  Entries present on only one side are
@@ -30,7 +32,8 @@ import sys
 
 GATED_FIELDS = ("implicit_ms", "fused_ms", "pipelined_ms",
                 "p50_ms", "p95_ms")
-GATED_HIGHER_FIELDS = ("aggregate_fps",)       # regression = fresh DROPS
+GATED_HIGHER_FIELDS = ("aggregate_fps",        # regression = fresh DROPS
+                       "goodput_fps")
 
 
 def _is_higher_better(key: str) -> bool:

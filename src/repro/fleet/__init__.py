@@ -16,11 +16,21 @@ instructions (:mod:`repro.fleet.instructions`, :mod:`~.compiler`) executed
 and recorded by a :class:`PoolExecutor`; :func:`compile_fleet` lowers a
 whole run ahead of time, and :class:`MultiPoolRouter` drives N pools as
 one engine with SEND/RECV migration and REBALANCE theta re-leasing.
+
+Fault tolerance (DESIGN.md §12): a seeded :class:`FaultPlan` armed as a
+:class:`FaultInjector` perturbs execution at instruction boundaries
+(injected RUN errors, pool crashes, dropped SENDs, latency skew); the
+executor retries within a :class:`RecoveryConfig` budget, the router
+recovers crashed pools' un-retired requests onto survivors, and every
+recovery decision lands in a seq-watermarked event log that replays
+bitwise alongside the instruction streams.
 """
 from repro.fleet.compiler import (SlotCompiler, compile_fleet,
                                   stream_signature, validate_stream)
 from repro.fleet.engine import FleetEngine, Member, build_cnn_fleet
 from repro.fleet.executor import MultiPoolRouter, PoolExecutor
+from repro.fleet.faults import (Fault, FaultInjector, FaultPlan,
+                                InjectedFault, PoolCrash, RecoveryConfig)
 from repro.fleet.instructions import (SCHEMA_VERSION, ExecRecord, Free,
                                       Instruction, Rebalance, Recv, Run,
                                       Send, dump_stream, load_stream,
@@ -36,17 +46,23 @@ __all__ = [
     "DeadlineEDF",
     "DevicePool",
     "ExecRecord",
+    "Fault",
+    "FaultInjector",
+    "FaultPlan",
     "FleetEngine",
     "FleetPlan",
     "Free",
+    "InjectedFault",
     "Instruction",
     "Lease",
     "Member",
     "MemberView",
     "MultiPoolRouter",
     "POLICY_NAMES",
+    "PoolCrash",
     "PoolExecutor",
     "Rebalance",
+    "RecoveryConfig",
     "Recv",
     "RoundRobin",
     "Router",

@@ -160,6 +160,7 @@ class MemberModel:
         self._flight: list[int] = []         # pipeline: next group index;
         #                                      service: remaining advances
         self.completed = 0
+        self.shed = 0
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -230,6 +231,22 @@ class MemberModel:
         if select is None or len(self._pending) <= 1:
             return self._pending.pop(0)
         return self._pending.pop(int(select(list(self._pending))))
+
+    def shed_expired(self, now: float | int) -> int:
+        """Mirror of ``EngineBase.shed_expired`` under the executor's
+        slot clock: drop past-deadline queue entries before the slot's
+        admission, so the compiled stream prices the same queue the live
+        run admits from.  Returns the number shed."""
+        pol = self.policy
+        if not getattr(pol, "sheds", False):
+            return 0
+        kept = [r for r in self._pending
+                if r.deadline is None
+                or not pol.expired(r.deadline, pol.now(float(now)))]
+        n = len(self._pending) - len(kept)
+        self._pending = kept
+        self.shed += n
+        return n
 
     def advance(self) -> int:
         """One scheduler slot; returns the number of streams finishing."""
@@ -327,6 +344,9 @@ def compile_fleet(fleet, requests: Sequence[Request],
                 adv = 0
                 if isinstance(instr, Run):
                     model = models[instr.member]
+                    model.shed_expired(slot)    # same dispatch-boundary
+                    #       sweep the executor runs (slot clock), so the
+                    #       mirror admits from the same queue
                     for _ in range(instr.slots):
                         if not model.has_work:
                             break

@@ -263,6 +263,10 @@ class FleetEngine(EngineBase):
         m = self._metrics[frid]
         m.started_at = c.metrics.started_at
         m.finished_at = c.metrics.finished_at
+        m.slo_ok = c.metrics.slo_ok
+        m.deadline = c.metrics.deadline
+        if c.metrics.status != "ok":    # shed/failed win; "ok" never
+            m.status = c.metrics.status     # downgrades a prior status
         fc = Completion(ticket=Ticket(rid=frid,
                                       submitted_at=m.submitted_at),
                         output=c.output, metrics=m)
@@ -288,6 +292,7 @@ class FleetEngine(EngineBase):
                "slots": self._slot,
                "dispatches": self._dispatches,
                "aggregate_fps": metrics.requests_per_s(),
+               "goodput_fps": metrics.goodput_fps(),
                "per_member": per_member,
                "per_model": metrics.by_model()}
         if self.pool is not None:

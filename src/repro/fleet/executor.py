@@ -39,9 +39,11 @@ import time
 from collections import deque
 from typing import Mapping, Sequence
 
+from repro.fleet.faults import (FaultInjector, InjectedFault, PoolCrash,
+                                RecoveryConfig)
 from repro.fleet.instructions import (ExecRecord, Free, Instruction, Recv,
                                       Rebalance, Run, Send)
-from repro.serving.api import (Completion, EngineBase, Request,
+from repro.serving.api import (Completion, EngineBase, QueueFull, Request,
                                RequestMetrics, Ticket)
 
 
@@ -73,30 +75,75 @@ class PoolExecutor:
     record     keep the executed stream in :attr:`records` (ExecRecord
                per instruction, with observed advances + wall-clock) —
                what serializes, replays, and exports to Chrome tracing
+    injector   optional :class:`~repro.fleet.faults.FaultInjector`,
+               consulted at every instruction boundary *before* any
+               engine state moves (so a retried instruction re-executes
+               against an unchanged pool)
+    recovery   :class:`~repro.fleet.faults.RecoveryConfig`: retry budget
+               and backoff for injected RUN failures, the per-RUN
+               timeout, and the degradation thresholds the router reads
     """
 
     def __init__(self, fleet, *, name: str = "pool0", transport=None,
-                 record: bool = True):
+                 record: bool = True, injector: FaultInjector | None = None,
+                 recovery: RecoveryConfig | None = None):
         self.fleet = fleet
         self.name = name
         self.transport = transport
         self.records: list[ExecRecord] = []
         self._record = record
+        self.injector = injector
+        self.recovery = recovery or RecoveryConfig()
+        self.retries = 0     # RUN attempts re-issued after injected faults
+        self.timeouts = 0    # RUNs whose wall time exceeded run_timeout_s
         self._seq = SeqCounter()          # router replaces with a shared
         #                                   counter in multi-pool runs
         self._held: dict[str, list] = {}  # member -> flights whose FREE
         #                                   has not executed yet
 
     # ------------------------------------------------------------------
+    def _arm(self, instr: Instruction, slot: int) -> int:
+        """Pass one instruction boundary through the fault injector.
+        An :class:`InjectedFault` is retried with bounded exponential
+        backoff (the fault fires before any engine state moves, so a
+        retry is a clean re-execution); retries exhausted escalate to
+        :class:`PoolCrash` — the router's recovery problem.  Returns the
+        retries spent, stamped on the record."""
+        if self.injector is None:
+            return 0
+        attempt = 0
+        while True:
+            try:
+                self.injector.before(self.name, instr, slot)
+                return attempt
+            except InjectedFault as e:
+                attempt += 1
+                self.retries += 1
+                if attempt > self.recovery.max_retries:
+                    raise PoolCrash(
+                        f"pool {self.name!r}: {instr.op} at slot {slot} "
+                        f"still failing after {attempt} attempts "
+                        f"(max_retries={self.recovery.max_retries}): {e}"
+                    ) from e
+                if self.recovery.backoff_s:
+                    time.sleep(self.recovery.backoff_s
+                               * (2 ** (attempt - 1)))
+
     def execute(self, instr: Instruction, slot: int) -> list[Completion]:
         """Execute one instruction; returns the completions it
-        materialized (only FREE and fused RUN ever do)."""
+        materialized (FREE, fused RUN, and SLO sheds at a RUN)."""
+        retries = self._arm(instr, slot)
         t0 = time.perf_counter()
         fleet = self.fleet
         done: list[Completion] = []
         advances = 0
         if isinstance(instr, Run):
             m = fleet._by_name[instr.member]
+            # SLO shedding happens at the dispatch boundary, clocked by
+            # the fleet slot — the deterministic domain replay re-derives
+            shed = getattr(m.engine, "shed_expired", None)
+            if shed is not None:
+                done.extend(fleet._adopt(m, c) for c in shed(slot))
             if instr.fused:
                 # opaque member: step() fuses dispatch and block
                 for _ in range(instr.slots):
@@ -128,7 +175,17 @@ class PoolExecutor:
                                    f"needs a MultiPoolRouter")
             pairs = fleet.withdraw_pending(instr.count,
                                            member=instr.member)
-            advances = self.transport.send(self.name, instr.peer, pairs)
+            if (self.injector is not None
+                    and self.injector.drops_send(self.name, slot)):
+                # lost in transit: the transport un-accounts and (live)
+                # re-routes the payloads; the record looks like a normal
+                # SEND — the drop itself rides the router's recovery log
+                advances = self.transport.drop_send(
+                    self.name, instr.peer, pairs, seq=self._seq.n,
+                    live=True)
+            else:
+                advances = self.transport.send(self.name, instr.peer,
+                                               pairs)
         elif isinstance(instr, Recv):
             if self.transport is None:
                 raise RuntimeError(f"pool {self.name!r} executed RECV with "
@@ -139,10 +196,18 @@ class PoolExecutor:
             self._rebalance(instr.theta)
         else:
             raise TypeError(f"unknown fleet instruction {instr!r}")
+        t1 = time.perf_counter()
+        if (isinstance(instr, Run)
+                and self.recovery.run_timeout_s is not None
+                and t1 - t0 > self.recovery.run_timeout_s):
+            # synchronous execution cannot abort a RUN that already
+            # finished — a timeout is a strike, and the router degrades
+            # the pool at timeout_strikes (drain + stop placing)
+            self.timeouts += 1
         if self._record:
             self.records.append(ExecRecord(
                 instr=instr, slot=slot, seq=next(self._seq),
-                advances=advances, t0=t0, t1=time.perf_counter()))
+                advances=advances, t0=t0, t1=t1, retries=retries))
         return done
 
     def execute_slot(self, instrs: Sequence[Instruction],
@@ -246,22 +311,46 @@ class MultiPoolRouter(EngineBase):
     rebalance_every  slots between drift checks
     plan_evals       search budget handed to ``planner.plan_fleet`` when
                      re-planning theta
+    injector         optional :class:`~repro.fleet.faults.FaultInjector`
+                     armed on every pool's executor
+    recovery         :class:`~repro.fleet.faults.RecoveryConfig` shared
+                     by every executor and the router's own degradation
+                     / crash-recovery decisions
+
+    Fault tolerance (DESIGN.md §12): a :class:`PoolCrash` raised by a
+    pool's step marks the pool dead and re-routes its un-retired
+    requests — reconstructed from the source map the placement log
+    maintains, re-submitted from the router's journal — onto surviving
+    pools (``status="recovered"``); requests no surviving pool can serve
+    complete as ``status="failed"``.  Every recovery decision is logged
+    as a seq-watermarked event on :attr:`events`, which extends the
+    placement log: :meth:`replay` applies the events at the same stream
+    positions, so a faulted run replays bitwise — same streams, same
+    shed set, same recovered and failed rids — with no injector
+    attached.  Retirement is at-most-once: a completion for an
+    already-completed rid is dropped (``duplicates_dropped``).
     """
 
     def __init__(self, fleets: Mapping[str, object], *,
                  rebalance_drift: float | None = None,
                  rebalance_every: int = 16,
-                 plan_evals: int = 8):
+                 plan_evals: int = 8,
+                 injector: FaultInjector | None = None,
+                 recovery: RecoveryConfig | None = None):
         super().__init__(max_queue=None)
         if not fleets:
             raise ValueError("a MultiPoolRouter needs at least one pool")
         self.executors: dict[str, PoolExecutor] = {}
         self._seq = SeqCounter()
+        self.recovery = recovery or RecoveryConfig()
         for name, fleet in fleets.items():
             ex = fleet.executor
             ex.name = name
             ex.transport = self
             ex._seq = self._seq         # router-wide order across pools
+            ex.recovery = self.recovery
+            if injector is not None:
+                ex.injector = injector
             self.executors[name] = ex
         self.rebalance_drift = rebalance_drift
         self.rebalance_every = rebalance_every
@@ -278,6 +367,23 @@ class MultiPoolRouter(EngineBase):
         self._served: dict[str, dict[str, int]] = {
             name: {} for name in self.executors}
         self._steps = 0
+        # --- fault-tolerance state -------------------------------------
+        self.dead: dict[str, str] = {}       # pool -> crash reason
+        self.degraded: set[str] = set()      # drained, not placed on
+        self.events: list[tuple] = []
+        #    chronological recovery log, seq-watermarked like placements:
+        #    ("fail", wm, pool) | ("recover", wm, pool, rid) |
+        #    ("drop", seq_of_send) — with streams + placements, the full
+        #    recipe for replaying a faulted run
+        self.duplicates_dropped = 0
+        self._journal: dict[int, Request] = {}
+        #    rid -> device-free copy of the request, kept until
+        #    retirement — what crash recovery re-submits
+        self._retry: list[int] = []          # rids awaiting re-placement
+        #                                      (every candidate was full)
+        self._recovery_done: list[Completion] = []
+        #    terminal completions recovery produced outside a step
+        self._replay_drops: set[int] = set()
 
     # ------------------------------------------------------------------
     @property
@@ -285,38 +391,61 @@ class MultiPoolRouter(EngineBase):
         return list(self.executors)
 
     @property
+    def alive(self) -> list[str]:
+        return [n for n in self.executors if n not in self.dead]
+
+    @property
     def in_transit(self) -> int:
         return sum(len(box) for box in self._mail.values())
 
     @property
     def has_work(self) -> bool:
-        return (any(ex.fleet.has_work for ex in self.executors.values())
-                or self.in_transit > 0)
+        # a dead pool's fleet may hold phantom queued/in-flight state —
+        # its requests were already re-routed or failed, so it does not
+        # count as outstanding work
+        return (any(self.executors[n].fleet.has_work for n in self.alive)
+                or self.in_transit > 0 or bool(self._retry)
+                or bool(self._recovery_done))
 
     @property
     def queued(self) -> int:
-        return (sum(ex.fleet.queued for ex in self.executors.values())
-                + self.in_transit)
+        return (sum(self.executors[n].fleet.queued for n in self.alive)
+                + self.in_transit + len(self._retry))
 
     @property
     def in_flight(self) -> int:
-        return sum(ex.fleet.in_flight for ex in self.executors.values())
+        return sum(self.executors[n].fleet.in_flight for n in self.alive)
 
     # ------------------------------------------------------------------
+    def _outstanding(self, name: str) -> int:
+        ex = self.executors[name]
+        return ex.fleet.queued + ex.fleet.in_flight
+
+    def _placeable(self, model: str | None = None) -> list[str]:
+        """Pools new work may be placed on: not dead, not degraded, and
+        (with a model tag) serving the model."""
+        return [n for n in self.executors
+                if n not in self.dead and n not in self.degraded
+                and (model is None
+                     or model in self.executors[n].fleet.router.names)]
+
     def submit(self, request: Request | object) -> Ticket:
         """Route to the pool with the least outstanding work among the
-        pools whose fleet serves the request's model."""
+        live pools whose fleet serves the request's model (degraded
+        pools only as a last resort)."""
         req = request if isinstance(request, Request) else Request(request)
-        cands = [(name, ex) for name, ex in self.executors.items()
-                 if req.model is None or req.model in ex.fleet.router.names]
+        cands = self._placeable(req.model)
+        if not cands:       # every serving pool degraded: place anyway —
+            #                 degraded beats rejected
+            cands = [n for n in self.alive
+                     if req.model is None
+                     or req.model in self.executors[n].fleet.router.names]
         if not cands:
-            served = {n: ex.fleet.router.names
-                      for n, ex in self.executors.items()}
-            raise KeyError(f"no pool serves model {req.model!r} "
-                           f"(pools serve: {served})")
-        name, _ex = min(cands,
-                        key=lambda kv: kv[1].fleet.queued
-                        + kv[1].fleet.in_flight)
+            served = {n: self.executors[n].fleet.router.names
+                      for n in self.alive}
+            raise KeyError(f"no pool serves model {req.model!r} among "
+                           f"live pools (pools serve: {served})")
+        name = min(cands, key=self._outstanding)
         return self._submit_to(name, req)
 
     def _submit_to(self, pool: str, req: Request) -> Ticket:
@@ -337,36 +466,208 @@ class MultiPoolRouter(EngineBase):
         self._order.append(rid)
         self._sources[(pool, ticket.rid)] = rid
         self.placements.append((self._seq.n, pool))
+        self._journal[rid] = Request(payload=req.payload,
+                                     gen_steps=req.gen_steps,
+                                     model=req.model,
+                                     deadline=req.deadline,
+                                     priority=req.priority)
         return Ticket(rid=rid, submitted_at=submitted_at)
 
     def step(self) -> list[Completion]:
-        """One slot on every pool (each pool compiles + executes its own
-        slot), then the periodic drift check."""
+        """One slot on every live pool (each pool compiles + executes its
+        own slot), recovering from any :class:`PoolCrash` a pool's step
+        escalates, then the periodic degradation and drift checks."""
         self._start_clock()
         done: list[Completion] = []
-        for name, ex in self.executors.items():
-            done.extend(self._adopt(name, c) for c in ex.fleet.step())
+        if self._recovery_done:     # terminal completions a recovery
+            done.extend(self._recovery_done)    # produced between steps
+            self._recovery_done = []
+        self._flush_retry(done)
+        for name in list(self.executors):
+            if name in self.dead:
+                continue
+            ex = self.executors[name]
+            try:
+                pool_done = ex.fleet.step()
+            except PoolCrash as e:
+                done.extend(self._fail_pool(name, str(e)))
+                continue
+            done.extend(c2 for c2 in (self._adopt(name, c)
+                                      for c in pool_done)
+                        if c2 is not None)
         self._steps += 1
+        self._check_degradation()
         if (self.rebalance_drift is not None
                 and self._steps % self.rebalance_every == 0):
             self._check_drift()
         return done
 
-    def _adopt(self, pool: str, c: Completion) -> Completion:
+    def _adopt(self, pool: str, c: Completion) -> Completion | None:
         """Re-account a pool completion at the router boundary (same move
-        as ``FleetEngine._adopt`` one layer down)."""
-        rid = self._sources.pop((pool, c.ticket.rid))
+        as ``FleetEngine._adopt`` one layer down).  Returns None for a
+        duplicate retirement (a rid already completed — at-most-once is
+        the router's invariant, not the pools')."""
+        key = (pool, c.ticket.rid)
+        if key not in self._sources:
+            raise ValueError(
+                f"pool {pool!r} retired rid {c.ticket.rid}, but the "
+                f"placement log routed no outstanding request there — "
+                f"the streams and the placement log disagree (offending "
+                f"member rid {c.ticket.rid} on pool {pool!r})")
+        rid = self._sources.pop(key)
+        if rid in self._completions:
+            self.duplicates_dropped += 1
+            return None
         m = self._metrics[rid]
         m.started_at = c.metrics.started_at
         m.finished_at = c.metrics.finished_at
+        m.slo_ok = c.metrics.slo_ok
+        m.deadline = c.metrics.deadline
+        if c.metrics.status != "ok":
+            # shed/failed always win; a member's plain "ok" never
+            # clobbers a "recovered" the router already stamped
+            m.status = c.metrics.status
         fc = Completion(ticket=Ticket(rid=rid,
                                       submitted_at=m.submitted_at),
                         output=c.output, metrics=m)
         self._completions[rid] = fc
+        self._journal.pop(rid, None)
         model = c.metrics.model or "?"
         served = self._served[pool]
         served[model] = served.get(model, 0) + 1
         return fc
+
+    # ------------------------------------------------------------------
+    # crash recovery (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def _pop_sources(self, pool: str) -> list[int]:
+        """Withdraw and return the router rids of every request the
+        placement log still maps onto ``pool``."""
+        keys = [k for k in self._sources if k[0] == pool]
+        return [self._sources.pop(k) for k in keys]
+
+    def _fail_request(self, rid: int) -> Completion:
+        """Retire ``rid`` as failed: no surviving pool can serve it."""
+        m = self._metrics[rid]
+        m.status = "failed"
+        m.finished_at = time.perf_counter()
+        fc = Completion(ticket=Ticket(rid=rid,
+                                      submitted_at=m.submitted_at),
+                        output=None, metrics=m)
+        self._completions[rid] = fc
+        self._journal.pop(rid, None)
+        return fc
+
+    def _reroute(self, rid: int, *, wm: int) -> list[Completion]:
+        """Re-place one un-retired request on a surviving pool, logging
+        the recovery at seq watermark ``wm``.  Returns the terminal
+        completions produced (a failure when nothing can serve it; empty
+        on a successful or deferred re-placement)."""
+        req = self._journal.get(rid)
+        if req is None:     # already terminal (shouldn't happen, but a
+            return []       # lost journal entry must not crash recovery)
+        cands = sorted(self._placeable(req.model), key=self._outstanding)
+        if not cands:
+            return [self._fail_request(rid)]
+        for name in cands:
+            try:
+                ticket = self.executors[name].fleet.submit(
+                    Request(payload=req.payload, gen_steps=req.gen_steps,
+                            model=req.model, deadline=req.deadline,
+                            priority=req.priority))
+            except QueueFull:
+                continue
+            self._sources[(name, ticket.rid)] = rid
+            self._metrics[rid].status = "recovered"
+            self.events.append(("recover", wm, name, rid))
+            return []
+        self._retry.append(rid)     # every candidate full: try again at
+        return []                   # the next step boundary
+
+    def _flush_retry(self, done: list[Completion]) -> None:
+        """Re-attempt rids whose recovery found every candidate full."""
+        if not self._retry:
+            return
+        backlog, self._retry = self._retry, []
+        wm = self._seq.n
+        for rid in backlog:
+            done.extend(self._reroute(rid, wm=wm))
+
+    def _fail_pool(self, name: str, reason: str) -> list[Completion]:
+        """Mark pool ``name`` dead and recover its un-retired requests:
+        re-route each onto a surviving pool (``status="recovered"``) or
+        retire it as failed.  Logged on :attr:`events` at the current
+        seq watermark so replay re-derives the same decisions."""
+        self.dead[name] = reason
+        wm = self._seq.n
+        self.events.append(("fail", wm, name))
+        done: list[Completion] = []
+        ex = self.executors[name]
+        lost: list[int] = []
+        for key in [k for k in self._sources if k[0] == name]:
+            c = ex.fleet._completions.get(key[1])
+            if c is not None:
+                # the crash interrupted the step after this request had
+                # already retired on the pool — harvest the completion
+                # instead of re-running it (replay reaches it through
+                # the recorded stream, before the fail event applies)
+                fc = self._adopt(name, c)
+                if fc is not None:
+                    done.append(fc)
+            else:
+                lost.append(self._sources.pop(key))
+        # payloads in transit TO the dead pool (SENT, not yet RECVed)
+        # would strand the mailbox forever — recover them too
+        for (s, d), box in self._mail.items():
+            if d == name:
+                while box:
+                    rid, _req = box.popleft()
+                    lost.append(rid)
+        for rid in sorted(lost):
+            done.extend(self._reroute(rid, wm=wm))
+        self._degrade_after_crash(name)
+        return done
+
+    def _degrade_after_crash(self, dead_pool: str) -> None:
+        """Graceful degradation: re-lease the survivor now carrying the
+        recovered load (a REBALANCE in its stream marks the adoption).
+        The split is kept at the survivor's current theta: theta depends
+        on the mix *proportions*, which the merged load preserves — only
+        the magnitude doubled — and re-planning mid-crash would stall
+        recovery behind a re-jit of every member at a new split."""
+        if not self.recovery.rebalance_on_crash:
+            return
+        from repro.fleet.planner import normalize_mix
+
+        cands = [n for n in self._placeable()
+                 if self.executors[n].fleet.pool is not None]
+        if not cands:       # stub fleets (no DevicePool): nothing to
+            return          # re-split
+        target = min(cands, key=self._outstanding)
+        ex = self.executors[target]
+        mix = normalize_mix({m.name: m.weight for m in ex.fleet.members})
+        try:
+            self.rebalance(target, mix=mix, theta=ex.fleet.pool.theta)
+        except Exception:   # degraded-but-alive beats a re-lease error
+            pass            # escalating a crash we already survived
+
+    def _check_degradation(self) -> None:
+        """Degrade pools whose RUN timeouts crossed ``timeout_strikes``:
+        drain their queue to a sibling and stop placing new work there
+        (in-flight work finishes where it is).  Degradation only affects
+        live placement — the drain's SEND/RECV land in the recorded
+        streams, so replay needs no event."""
+        if self.recovery.run_timeout_s is None:
+            return
+        for name, ex in self.executors.items():
+            if name in self.dead or name in self.degraded:
+                continue
+            if ex.timeouts < self.recovery.timeout_strikes:
+                continue
+            if not [n for n in self._placeable() if n != name]:
+                continue    # nowhere to shift the load: keep serving
+            self.degraded.add(name)
+            self.drain_pool(name)
 
     # ------------------------------------------------------------------
     # migration (SEND on the source, RECV on the destination)
@@ -382,32 +683,65 @@ class MultiPoolRouter(EngineBase):
             if name not in self.executors:
                 raise KeyError(f"unknown pool {name!r} "
                                f"(pools: {self.pools})")
-        self.executors[src].inject(Send(peer=dst, member=member,
-                                        count=count))
+        try:
+            self.executors[src].inject(Send(peer=dst, member=member,
+                                            count=count))
+        except PoolCrash as e:      # crash at the SEND boundary: nothing
+            #                         left the source — normal recovery
+            self._recovery_done.extend(self._fail_pool(src, str(e)))
+            return 0
         box = self._mail.get((src, dst))
         moved = len(box) if box else 0
-        self.executors[dst].inject(Recv(peer=src))
+        try:
+            self.executors[dst].inject(Recv(peer=src))
+        except PoolCrash as e:      # crash at the RECV boundary: the
+            #                         payloads are in transit — _fail_pool
+            #                         drains the mailbox and re-routes
+            self._recovery_done.extend(self._fail_pool(dst, str(e)))
         return moved
 
     def drain_pool(self, name: str) -> int:
         """Evacuate every queued request of pool ``name`` to the least
-        outstanding sibling (in-flight work finishes where it is; the
-        pool takes no new admissions once its queue is empty)."""
-        others = [n for n in self.executors if n != name]
+        outstanding placeable sibling (in-flight work finishes where it
+        is; the pool takes no new admissions once its queue is empty)."""
+        others = [n for n in self._placeable() if n != name]
         if not others:
-            raise ValueError(f"cannot drain {name!r}: it is the only pool")
-        dst = min(others, key=lambda n: self.executors[n].fleet.queued
-                  + self.executors[n].fleet.in_flight)
+            raise ValueError(f"cannot drain {name!r}: no other live, "
+                             f"non-degraded pool to drain into")
+        dst = min(others, key=self._outstanding)
         return self.migrate(name, dst)
 
     # transport surface used by PoolExecutor SEND/RECV ------------------
     def send(self, src: str, dst: str, pairs) -> int:
+        if self._seq.n in self._replay_drops:
+            # replaying a recorded run whose live SEND was dropped: the
+            # payloads must vanish here too, or the later RECV delivers
+            # requests the live run never saw
+            return self.drop_send(src, dst, pairs, seq=self._seq.n,
+                                  live=False)
         if dst not in self.executors:
             raise KeyError(f"SEND to unknown pool {dst!r} "
                            f"(pools: {self.pools})")
         box = self._mail.setdefault((src, dst), deque())
         for frid, req in pairs:
             box.append((self._sources.pop((src, frid)), req))
+        return len(pairs)
+
+    def drop_send(self, src: str, dst: str, pairs, *, seq: int,
+                  live: bool) -> int:
+        """A SEND lost in transit: un-account the withdrawn requests and
+        (live) re-route each onto a placeable pool.  Logged as
+        ``("drop", seq)`` so replay drops the same SEND, plus one
+        recover event per re-placement at watermark ``seq + 1`` — the
+        live resubmission happened *after* the SEND withdrew its
+        payloads, so replay must apply it after the SEND record too.
+        Returns ``len(pairs)`` either way: the record's ``advances``
+        match a delivered SEND bitwise."""
+        self.events.append(("drop", seq))
+        for frid, _req in pairs:
+            rid = self._sources.pop((src, frid))
+            if live:
+                self._recovery_done.extend(self._reroute(rid, wm=seq + 1))
         return len(pairs)
 
     def recv(self, dst: str, src: str, count: int | None, submit) -> int:
@@ -437,7 +771,7 @@ class MultiPoolRouter(EngineBase):
 
         for name, ex in self.executors.items():
             fleet = ex.fleet
-            if fleet.pool is None:
+            if fleet.pool is None or name in self.dead:
                 continue
             observed = self.observed_mix(name)
             if len(observed) < 2:       # one model (or nothing) served:
@@ -448,7 +782,11 @@ class MultiPoolRouter(EngineBase):
                 abs(observed.get(k, 0.0) - planned.get(k, 0.0))
                 for k in set(observed) | set(planned))
             if drift > self.rebalance_drift:
-                self.rebalance(name, mix=observed)
+                try:
+                    self.rebalance(name, mix=observed)
+                except PoolCrash as e:      # crash at the REBALANCE
+                    self._recovery_done.extend(    # boundary
+                        self._fail_pool(name, str(e)))
 
     def rebalance(self, pool: str, *, mix: Mapping[str, float],
                   theta: float | None = None) -> float:
@@ -485,7 +823,8 @@ class MultiPoolRouter(EngineBase):
 
     def replay(self, streams: Mapping[str, Sequence[ExecRecord]],
                placements: Sequence[tuple[int, str]],
-               requests: Sequence[Request | object]):
+               requests: Sequence[Request | object],
+               events: Sequence[tuple] = ()):
         """Re-execute a recorded multi-pool run on this (fresh) router:
         every record across every pool executes in router-wide seq order,
         and the i-th request re-submits to its recorded pool exactly when
@@ -494,7 +833,14 @@ class MultiPoolRouter(EngineBase):
         decision is re-made — the streams plus the placement log ARE the
         run — so the re-executed streams and per-request outputs are
         bitwise-identical to the recording (tested, including runs with
-        SEND/RECV migration and mid-run REBALANCE)."""
+        SEND/RECV migration and mid-run REBALANCE).
+
+        ``events`` extends the recipe to faulted runs: the recorded
+        :attr:`events` log replays each crash, recovery and dropped SEND
+        at the same stream position (its seq watermark, applied in log
+        order) — so a run recorded under fault injection replays bitwise
+        with no injector attached, reproducing the same recovered,
+        failed and shed sets."""
         unknown = set(streams) - set(self.executors)
         if unknown:
             raise KeyError(f"streams for unknown pools {sorted(unknown)} "
@@ -502,15 +848,28 @@ class MultiPoolRouter(EngineBase):
         if len(placements) != len(requests):
             raise ValueError(f"{len(requests)} requests but "
                              f"{len(placements)} placements")
+        events = [tuple(e) for e in events]
+        self._replay_drops = {e[1] for e in events if e[0] == "drop"}
+        # rids recovered by an event *after* index i: a pool failure
+        # only fails the rids no later event recovers
+        later_recov: list[set[int]] = [set() for _ in
+                                       range(len(events) + 1)]
+        for i in range(len(events) - 1, -1, -1):
+            later_recov[i] = set(later_recov[i + 1])
+            if events[i][0] == "recover":
+                later_recov[i].add(events[i][3])
+        reqs = [r if isinstance(r, Request) else Request(r)
+                for r in requests]
         merged = sorted(((r, pool) for pool, recs in streams.items()
                          for r in recs), key=lambda t: t[0].seq)
-        pi = 0
+        pi = ei = 0
         for r, pool in merged:
             while pi < len(placements) and placements[pi][0] <= r.seq:
-                self._submit_to(placements[pi][1], requests[pi]
-                                if isinstance(requests[pi], Request)
-                                else Request(requests[pi]))
+                self._submit_to(placements[pi][1], reqs[pi])
                 pi += 1
+            while ei < len(events) and events[ei][1] <= r.seq:
+                self._apply_event(events[ei], later_recov[ei + 1], reqs)
+                ei += 1
             ex = self.executors[pool]
             fleet = ex.fleet
             fleet._start_clock()
@@ -521,16 +880,53 @@ class MultiPoolRouter(EngineBase):
                 fleet._slot = r.slot + 1
         for _wm, pool in placements[pi:]:   # submissions after the last
             #                                 record (an already-idle run)
-            self._submit_to(pool, requests[pi]
-                            if isinstance(requests[pi], Request)
-                            else Request(requests[pi]))
+            self._submit_to(pool, reqs[pi])
             pi += 1
+        while ei < len(events):             # events after the last record
+            self._apply_event(events[ei], later_recov[ei + 1], reqs)
+            ei += 1
         if self.has_work:
             raise ValueError(
                 f"recorded streams exhausted with work still outstanding "
                 f"(queued={self.queued}, in_flight={self.in_flight}); "
                 f"were they recorded from this request trace?")
         return self.result()
+
+    def _apply_event(self, event: tuple, recovered_later: set[int],
+                     reqs: Sequence[Request]) -> None:
+        """Apply one recorded recovery event at its replay position.
+        Router rids are dense 0..n-1 in submission order, so ``reqs[rid]``
+        is the request an event names."""
+        kind = event[0]
+        if kind == "fail":
+            _kind, wm, pool = event
+            self.dead[pool] = "replayed crash"
+            self.events.append(("fail", wm, pool))
+            lost = self._pop_sources(pool)
+            for (s, d), box in self._mail.items():
+                if d == pool:       # in-transit payloads died with it
+                    while box:
+                        rid, _req = box.popleft()
+                        lost.append(rid)
+            for rid in sorted(lost):
+                if rid not in recovered_later:
+                    self._fail_request(rid)
+        elif kind == "recover":
+            _kind, wm, pool, rid = event
+            req = reqs[rid]
+            ticket = self.executors[pool].fleet.submit(
+                Request(payload=req.payload, gen_steps=req.gen_steps,
+                        model=req.model, deadline=req.deadline,
+                        priority=req.priority))
+            self._sources[(pool, ticket.rid)] = rid
+            self._metrics[rid].status = "recovered"
+            self.events.append(("recover", wm, pool, rid))
+        elif kind == "drop":
+            pass    # consumed via _replay_drops inside send(); the
+            #         replayed drop_send re-logs it at the same position
+        else:
+            raise ValueError(f"unknown recovery event kind {kind!r} "
+                             f"in {event!r}")
 
     def _extra_stats(self, metrics) -> dict:
         per_pool = {}
@@ -542,7 +938,11 @@ class MultiPoolRouter(EngineBase):
                 "served": dict(self._served[name]),
                 "queued": fleet.queued,
                 "in_flight": fleet.in_flight,
+                "retries": ex.retries,
+                "timeouts": ex.timeouts,
             }
+            if name in self.dead:
+                per_pool[name]["dead"] = self.dead[name]
             if fleet.pool is not None:
                 per_pool[name]["pool"] = fleet.pool.stats()
         return {"engine": "multipool",
@@ -551,5 +951,13 @@ class MultiPoolRouter(EngineBase):
                 "rebalances": [{"pool": p, "theta": round(t, 4)}
                                for p, t in self.rebalances],
                 "in_transit": self.in_transit,
+                "dead": sorted(self.dead),
+                "degraded": sorted(self.degraded),
+                "duplicates_dropped": self.duplicates_dropped,
+                "recovery_events": len(self.events),
+                "shed": metrics.count("shed"),
+                "failed": metrics.count("failed"),
+                "recovered": metrics.count("recovered"),
                 "aggregate_fps": metrics.requests_per_s(),
+                "goodput_fps": metrics.goodput_fps(),
                 "per_model": metrics.by_model()}

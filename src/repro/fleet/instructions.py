@@ -128,6 +128,10 @@ class ExecRecord:
     advances: int = 0
     t0: float | None = None
     t1: float | None = None
+    retries: int = 0      # attempts re-issued after injected RUN faults
+    #                       (observational, like t0/t1: excluded from
+    #                       stream_signature so a clean replay of a
+    #                       faulted recording still matches bitwise)
 
 
 def instr_to_dict(instr: Instruction) -> dict:
@@ -166,6 +170,7 @@ def stream_to_json(records: Sequence[ExecRecord], *,
             "advances": r.advances,
             "t0": r.t0,
             "t1": r.t1,
+            **({"retries": r.retries} if r.retries else {}),
         } for r in records],
     }
 
@@ -177,7 +182,8 @@ def stream_from_json(doc: dict) -> list[ExecRecord]:
                          f"{version!r} != supported {SCHEMA_VERSION}")
     return [ExecRecord(instr=instr_from_dict(r["instr"]), slot=r["slot"],
                        seq=r.get("seq", 0), advances=r.get("advances", 0),
-                       t0=r.get("t0"), t1=r.get("t1"))
+                       t0=r.get("t0"), t1=r.get("t1"),
+                       retries=r.get("retries", 0))
             for r in doc["records"]]
 
 

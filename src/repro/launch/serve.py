@@ -57,6 +57,16 @@ Fleet (several CNNs multiplexed over one device pool, DESIGN.md §10):
   and the executed per-pool instruction streams interleave by router
   sequence number.  ``--trace PATH`` exports the executed stream as
   Chrome-tracing JSON (one track per submesh per pool).
+
+  ``--slo-ms X`` serves every member under a ``ShedPolicy`` with an
+  ``X``-millisecond wall-clock deadline per request — past-deadline queue
+  entries are shed instead of served, and the summary reports goodput
+  (served AND within SLO) next to raw throughput.  ``--faults PLAN.json``
+  arms a seeded ``repro.fleet.FaultPlan`` on the executors: deterministic
+  injected RUN errors / pool crashes / dropped SENDs / latency skew,
+  retried and recovered per DESIGN.md §12 (crash recovery needs
+  ``--pools >= 2``).  A malformed plan or a non-positive SLO is a usage
+  error (exit 2).
 """
 from __future__ import annotations
 
@@ -189,12 +199,26 @@ def serve_fleet(args) -> int:
     or over ``--pools N`` process-local pools (hosts stand-in) behind a
     ``MultiPoolRouter``, each pool replaying its own compiled instruction
     stream."""
-    from repro.fleet import (MultiPoolRouter, build_cnn_fleet, make_policy,
-                             mix_schedule, plan_fleet, plan_rows)
+    from repro.fleet import (FaultInjector, FaultPlan, MultiPoolRouter,
+                             build_cnn_fleet, make_policy, mix_schedule,
+                             plan_fleet, plan_rows)
+    from repro.serving import ShedPolicy
 
     mix = _parse_fleet_mix(args)
     if args.pools < 1:
         _fail(f"--pools must be >= 1, got {args.pools}")
+    if args.slo_ms is not None and not args.slo_ms > 0:
+        _fail(f"--slo-ms must be > 0, got {args.slo_ms}")
+    fault_plan = None
+    if args.faults is not None:
+        try:
+            fault_plan = FaultPlan.load(args.faults)
+        except (OSError, ValueError) as e:
+            _fail(f"--faults {args.faults!r}: {e}")
+    admission = None
+    if args.slo_ms is not None:
+        admission = {m: ShedPolicy(slo_s=args.slo_ms / 1e3, clock="wall")
+                     for m in mix}
     plan = None
     if args.plan:
         plan = plan_fleet(mix, max_evals=args.plan_evals)
@@ -206,7 +230,7 @@ def serve_fleet(args) -> int:
         return build_cnn_fleet(
             list(mix), plan=plan, scheme=args.scheme,
             use_pallas=not args.no_pallas, policy=make_policy(args.policy),
-            weights=mix, max_queue=args.max_queue,
+            weights=mix, admission=admission, max_queue=args.max_queue,
             co_dispatch=0 if args.no_interleave else args.co_dispatch,
             burst=args.burst)
 
@@ -220,6 +244,8 @@ def serve_fleet(args) -> int:
 
     if args.pools == 1:
         engine, pool = build()
+        if fault_plan is not None:
+            engine.executor.injector = FaultInjector(fault_plan)
         for m in engine.members:         # warm each member's per-group jits
             # any image warms a member — a skewed mix or --requests <
             # number of models can leave a member with no tagged request
@@ -251,10 +277,16 @@ def serve_fleet(args) -> int:
                       f"model-side={fps:8.1f} predicted={pred:8.1f} "
                       f"measured="
                       + (f"{meas:8.2f}" if meas is not None else "     n/a"))
+        if args.slo_ms is not None or fault_plan is not None:
+            print(f"[serve] goodput {st['goodput_fps']:.2f} fps "
+                  f"(shed {res.metrics.count('shed')}, "
+                  f"retries {engine.executor.retries})")
         streams = {"pool0": engine.stream}
     else:
         fleets = {f"pool{p}": build()[0] for p in range(args.pools)}
-        router = MultiPoolRouter(fleets)
+        router = MultiPoolRouter(
+            fleets, injector=(FaultInjector(fault_plan)
+                              if fault_plan is not None else None))
         for fleet_engine in fleets.values():
             for m in fleet_engine.members:
                 m.engine.runner.run_sequential(images[:1])
@@ -274,6 +306,12 @@ def serve_fleet(args) -> int:
             print(f"  {name:<14} {pm['completed']} done  "
                   f"p50 {pm['p50_ms']:.1f} ms  p95 {pm['p95_ms']:.1f} ms  "
                   f"{pm['requests_per_s']:.2f} fps")
+        if args.slo_ms is not None or fault_plan is not None:
+            print(f"[serve] goodput {st['goodput_fps']:.2f} fps "
+                  f"(shed {st['shed']}, failed {st['failed']}, "
+                  f"recovered {st['recovered']}, dead pools "
+                  f"{st['dead'] or '-'}, duplicates dropped "
+                  f"{st['duplicates_dropped']})")
         streams = {name: ex.records
                    for name, ex in router.executors.items()}
     if args.trace:
@@ -433,6 +471,15 @@ def main(argv=None):
                        help="write the executed instruction stream as "
                             "Chrome-tracing JSON to PATH (one track per "
                             "submesh per pool; open in chrome://tracing)")
+    fleet.add_argument("--faults", default=None, metavar="PLAN.json",
+                       help="arm a seeded FaultPlan (repro.fleet.faults) "
+                            "on the executors: deterministic RUN errors, "
+                            "pool crashes, dropped SENDs, latency skew")
+    fleet.add_argument("--slo-ms", type=float, default=None,
+                       help="per-request wall-clock SLO in ms: serve "
+                            "every member under a ShedPolicy that drops "
+                            "past-deadline queue entries and report "
+                            "goodput (served AND within SLO)")
     _add_common(fleet)
     fleet.set_defaults(func=serve_fleet)
 

@@ -6,12 +6,12 @@ The LM dual-mesh runner and the CNN dual-core runner serve through the same
 latency ``Metrics``, and a pluggable ``AdmissionPolicy``.  ``replay`` drives
 any engine with a fixed arrival trace (``poisson_arrivals`` builds one).
 """
-from repro.serving.api import (AdmissionPolicy, Completion,
+from repro.serving.api import (STATUSES, AdmissionPolicy, Completion,
                                DeadlineAdmission, Engine, EngineBase,
                                FixedRateAdmission, GreedyAdmission, Metrics,
                                PriorityAdmission, QueueFull, Request,
-                               RequestMetrics, ServeResult, Ticket,
-                               percentile, poisson_arrivals, replay)
+                               RequestMetrics, ServeResult, ShedPolicy,
+                               Ticket, percentile, poisson_arrivals, replay)
 from repro.serving.cnn import DualCoreEngine, stream_images
 from repro.serving.lm import DualMeshEngine
 
@@ -30,7 +30,9 @@ __all__ = [
     "QueueFull",
     "Request",
     "RequestMetrics",
+    "STATUSES",
     "ServeResult",
+    "ShedPolicy",
     "Ticket",
     "percentile",
     "poisson_arrivals",

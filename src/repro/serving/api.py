@@ -73,6 +73,12 @@ class Ticket:
     submitted_at: float
 
 
+#: terminal request states: served normally / dropped past-deadline by a
+#: ShedPolicy / lost with no surviving pool to serve it / re-routed off a
+#: crashed pool and served elsewhere
+STATUSES = ("ok", "shed", "failed", "recovered")
+
+
 @dataclasses.dataclass
 class RequestMetrics:
     """Wall-clock lifecycle of one request (perf_counter timestamps)."""
@@ -82,6 +88,10 @@ class RequestMetrics:
     started_at: float | None = None     # admitted into the engine
     finished_at: float | None = None    # output materialized
     model: str | None = None            # Request.model tag, if any
+    status: str = "ok"                  # one of STATUSES
+    deadline: float | None = None       # Request.deadline, for SLO checks
+    slo_ok: bool = True                 # finished within its deadline
+    #                                     (vacuously True with none set)
 
     @property
     def wait_s(self) -> float:
@@ -102,11 +112,17 @@ class RequestMetrics:
 
 @dataclasses.dataclass
 class Completion:
-    """A finished request: its ticket, output, and measured lifecycle."""
+    """A finished request: its ticket, output, and measured lifecycle.
+    ``output`` is None for shed/failed requests — check :attr:`status`
+    before using it."""
 
     ticket: Ticket
     output: Any
     metrics: RequestMetrics
+
+    @property
+    def status(self) -> str:
+        return self.metrics.status
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -134,9 +150,27 @@ class Metrics:
         return len(self.requests)
 
     def latencies_ms(self, model: str | None = None) -> list[float]:
+        """Latencies of *served* requests (ok/recovered) — shed and
+        failed requests produced no output, so they do not belong in
+        service-latency percentiles (they are counted separately)."""
         return [m.latency_s * 1e3 for m in self.requests
                 if m.finished_at is not None
+                and m.status in ("ok", "recovered")
                 and (model is None or m.model == model)]
+
+    def count(self, status: str) -> int:
+        return sum(1 for m in self.requests if m.status == status)
+
+    def goodput(self) -> int:
+        """Served requests that met their deadline (no deadline = met)."""
+        return sum(1 for m in self.requests
+                   if m.status in ("ok", "recovered") and m.slo_ok)
+
+    def goodput_fps(self) -> float:
+        """Within-SLO completions per second — the metric overload
+        protection optimizes (serving a request late counts for
+        nothing; shedding it early at least frees the capacity)."""
+        return self.goodput() / self.wall_s if self.wall_s else 0.0
 
     def p50_ms(self) -> float:
         return percentile(self.latencies_ms(), 50)
@@ -174,16 +208,25 @@ class Metrics:
                 "requests_per_s": round(len(lats) / self.wall_s, 3)
                 if self.wall_s else 0.0,
             }
+            shed = sum(1 for m in self.requests
+                       if m.model == model and m.status == "shed")
+            if shed:
+                out[model]["shed"] = shed
         return out
 
     def summary(self) -> dict:
-        """Aggregate snapshot, JSON-safe in the zero-completions case
-        (empty percentiles report None, an unstarted clock 0.0)."""
+        """Aggregate snapshot, JSON-safe in the zero-completions and
+        everything-shed cases (empty percentiles report None, an
+        unstarted clock and an empty goodput 0.0)."""
         lats = self.latencies_ms()
         out = {"completed": self.completed,
                "wall_s": round(self.wall_s, 6),
                "requests_per_s": round(len(lats) / self.wall_s, 3)
                if self.wall_s else 0.0,
+               "goodput_fps": round(self.goodput_fps(), 3),
+               "shed": self.count("shed"),
+               "failed": self.count("failed"),
+               "recovered": self.count("recovered"),
                "p50_ms": round(percentile(lats, 50), 3) if lats else None,
                "p95_ms": round(percentile(lats, 95), 3) if lats else None}
         per_model = self.by_model()
@@ -279,6 +322,66 @@ class PriorityAdmission:
                    key=lambda i: (-pending[i].priority, i))
 
 
+@dataclasses.dataclass
+class ShedPolicy:
+    """SLO enforcement: drop queued requests already past their deadline
+    instead of serving them late.
+
+    Wraps an inner :class:`AdmissionPolicy` (default
+    ``FixedRateAdmission(1)``) for the how-many/which decisions; the shed
+    decision happens at two points: engines sweep their queue at the
+    start of every dispatch (``EngineBase.shed_expired`` — the fleet
+    executor calls it with the fleet slot before each RUN) and
+    :meth:`EngineBase._pop_admission` re-checks the selected request at
+    admission, so a request can never enter the pipeline already dead.
+    Shed requests complete with ``status="shed"`` and no output —
+    explicitly accounted, never silently lost.
+
+    ``clock`` picks the deadline domain: ``"slot"`` (default) compares
+    deadlines against the engine's scheduler-slot counter — fully
+    deterministic, so faulted runs replay bitwise with the same shed
+    set; ``"wall"`` compares against ``time.perf_counter()`` — the
+    production mode (``serve fleet --slo-ms``), not replay-deterministic
+    by nature.  With ``slo_s`` set (wall clock only), requests submitted
+    without a deadline get one stamped at ``submit + slo_s``.
+    """
+
+    inner: AdmissionPolicy | None = None
+    slo_s: float | None = None
+    clock: str = "slot"
+
+    sheds = True        # engines detect shedding support via this attr
+
+    def __post_init__(self):
+        if self.clock not in ("slot", "wall"):
+            raise ValueError(f"ShedPolicy clock must be 'slot' or 'wall' "
+                             f"(got {self.clock!r})")
+        if self.slo_s is not None:
+            if not self.slo_s > 0:
+                raise ValueError(f"slo_s must be > 0 (got {self.slo_s})")
+            if self.clock != "wall":
+                raise ValueError("slo_s auto-stamps wall-clock deadlines; "
+                                 "with clock='slot' set Request.deadline "
+                                 "to a slot index explicitly")
+        if self.inner is None:
+            self.inner = FixedRateAdmission(1)
+
+    def now(self, slot_clock: float) -> float:
+        return (time.perf_counter() if self.clock == "wall"
+                else float(slot_clock))
+
+    def expired(self, deadline: float | None, now: float) -> bool:
+        return deadline is not None and now > deadline
+
+    def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        return self.inner.admit(queued=queued, in_flight=in_flight,
+                                capacity=capacity)
+
+    def select(self, pending: Sequence[Request]) -> int:
+        sel = getattr(self.inner, "select", None)
+        return 0 if sel is None else int(sel(pending))
+
+
 # --------------------------------------------------------------------------
 # the engine protocol
 # --------------------------------------------------------------------------
@@ -323,6 +426,10 @@ class EngineBase:
         self._metrics: dict[int, RequestMetrics] = {}
         self._next_rid = 0
         self._t0: float | None = None
+        self._ext_clock: float | None = None   # last externally-supplied
+        #                                        shed clock (fleet slot)
+        self._shed_buf: list[Completion] = []  # sheds found mid-admission,
+        #                                        drained by the next sweep
 
     @property
     def queued(self) -> int:
@@ -343,27 +450,93 @@ class EngineBase:
         self._next_rid += 1
         req.rid = rid
         ticket = Ticket(rid=rid, submitted_at=time.perf_counter())
+        pol = getattr(self, "policy", None)
+        if (getattr(pol, "sheds", False) and req.deadline is None
+                and pol.slo_s is not None):
+            req.deadline = ticket.submitted_at + pol.slo_s
         self._metrics[rid] = RequestMetrics(rid=rid,
                                             submitted_at=ticket.submitted_at,
-                                            model=req.model)
+                                            model=req.model,
+                                            deadline=req.deadline)
         self._order.append(rid)
         self._pending.append((req, ticket))
         return ticket
 
-    def _pop_admission(self) -> tuple[Request, Ticket]:
+    def _pop_admission(self) -> tuple[Request, Ticket] | None:
         """Pop the next request to admit: FIFO unless the engine's
-        admission policy orders the queue via ``select`` (EDF/priority)."""
-        select = getattr(getattr(self, "policy", None), "select", None)
-        if select is None or len(self._pending) <= 1:
-            return self._pending.popleft()
-        i = int(select([req for req, _ in self._pending]))
-        if not 0 <= i < len(self._pending):
-            raise ValueError(f"admission policy {self.policy!r} selected "
-                             f"index {i}, outside the queue "
-                             f"[0, {len(self._pending)})")
-        item = self._pending[i]
-        del self._pending[i]
-        return item
+        admission policy orders the queue via ``select`` (EDF/priority).
+        Under a :class:`ShedPolicy` a selected request already past its
+        deadline is shed instead of admitted (buffered on
+        ``_shed_buf``); returns None when shedding emptied the queue."""
+        pol = getattr(self, "policy", None)
+        sheds = getattr(pol, "sheds", False)
+        select = getattr(pol, "select", None)
+        while self._pending:
+            if select is None or len(self._pending) <= 1:
+                item = self._pending.popleft()
+            else:
+                i = int(select([req for req, _ in self._pending]))
+                if not 0 <= i < len(self._pending):
+                    raise ValueError(f"admission policy {self.policy!r} "
+                                     f"selected index {i}, outside the "
+                                     f"queue [0, {len(self._pending)})")
+                item = self._pending[i]
+                del self._pending[i]
+            req, _ticket = item
+            if sheds and pol.expired(req.deadline, pol.now(self._clock())):
+                self._shed_buf.append(self._shed(req))
+                continue
+            return item
+        return None
+
+    # -- SLO shedding ---------------------------------------------------
+    def _clock(self) -> float:
+        """The slot-domain shed clock: the last externally supplied slot
+        (the fleet executor clocks members with the fleet slot — the
+        domain the replayable deadlines live in), else the engine's own
+        slot counter."""
+        if self._ext_clock is not None:
+            return self._ext_clock
+        return float(getattr(self, "_slot", 0))
+
+    def _shed(self, req: Request) -> Completion:
+        """File one past-deadline request as a ``status="shed"``
+        completion (no output) — explicitly dropped, never lost."""
+        m = self._metrics[req.rid]
+        m.status = "shed"
+        m.finished_at = time.perf_counter()
+        c = Completion(ticket=Ticket(rid=req.rid,
+                                     submitted_at=m.submitted_at),
+                       output=None, metrics=m)
+        self._completions[req.rid] = c
+        return c
+
+    def _take_shed(self) -> list[Completion]:
+        out, self._shed_buf = self._shed_buf, []
+        return out
+
+    def shed_expired(self, now: float | None = None) -> list[Completion]:
+        """Sweep the queue for requests past deadline under the engine's
+        :class:`ShedPolicy` (no-op without one).  ``now`` sets the
+        slot-domain clock (the fleet executor passes the fleet slot
+        before each RUN — live and replayed runs shed identically);
+        None uses the engine's own counter.  Returns the shed
+        completions, including any buffered by admission-time checks."""
+        pol = getattr(self, "policy", None)
+        if not getattr(pol, "sheds", False):
+            return self._take_shed()
+        if now is not None:
+            self._ext_clock = float(now)
+        now_v = pol.now(self._clock())
+        out = self._take_shed()
+        kept: deque[tuple[Request, Ticket]] = deque()
+        for req, ticket in self._pending:
+            if pol.expired(req.deadline, now_v):
+                out.append(self._shed(req))
+            else:
+                kept.append((req, ticket))
+        self._pending = kept
+        return out
 
     def withdraw_pending(self, max_n: int | None = None
                          ) -> list[tuple[int, Request]]:
@@ -397,6 +570,9 @@ class EngineBase:
         jax.block_until_ready(output)
         m = self._metrics[rid]
         m.finished_at = time.perf_counter()
+        pol = getattr(self, "policy", None)
+        if m.deadline is not None and getattr(pol, "sheds", False):
+            m.slo_ok = not pol.expired(m.deadline, pol.now(self._clock()))
         c = Completion(ticket=Ticket(rid=rid, submitted_at=m.submitted_at),
                        output=output, metrics=m)
         self._completions[rid] = c

@@ -144,6 +144,11 @@ class DualCoreEngine(EngineBase):
         :meth:`retire` after — the same block-last rule ``step`` applies
         within one engine, extended across engines."""
         self._start_clock()
+        # 0. shed past-deadline queue entries (ShedPolicy only) against
+        #    the engine's own slot counter — unless an external clock
+        #    (the fleet executor's slot) already swept this dispatch
+        if self._ext_clock is None:
+            self._shed_buf.extend(self.shed_expired())
         finished: list[_Flight] = []
         # 1. advance in-flight streams, oldest (deepest group) first
         kept: list[_Flight] = []
@@ -159,25 +164,31 @@ class DualCoreEngine(EngineBase):
         n = max(0, min(n, 1, self.capacity - len(self._flight),
                        len(self._pending)))
         if n:
-            req, ticket = self._pop_admission()
-            self._metrics[req.rid].started_at = time.perf_counter()
-            f = _Flight(rid=req.rid,
-                        env=self.runner.place_input(req.payload),
-                        next_group=0, ticket=ticket,
-                        metrics=self._metrics[req.rid])
-            self._dispatch(f)
-            if f.next_group >= self.capacity:   # single-group chain
-                finished.append(f)
-            else:
-                self._flight.append(f)
+            popped = self._pop_admission()      # None: everything left in
+            if popped is not None:              # the queue was shed
+                req, ticket = popped
+                self._metrics[req.rid].started_at = time.perf_counter()
+                f = _Flight(rid=req.rid,
+                            env=self.runner.place_input(req.payload),
+                            next_group=0, ticket=ticket,
+                            metrics=self._metrics[req.rid])
+                self._dispatch(f)
+                if f.next_group >= self.capacity:   # single-group chain
+                    finished.append(f)
+                else:
+                    self._flight.append(f)
         self._slot += 1
         return finished
 
     def retire(self, finished: list["_Flight"]) -> list[Completion]:
         """Materialize the outputs of flights returned by
         :meth:`advance` — only after every dispatch of the slot is in
-        flight; blocking earlier would serialize the cross-core overlap."""
-        return [self._finish(f.rid, f.env["out"]) for f in finished]
+        flight; blocking earlier would serialize the cross-core overlap.
+        Shed completions buffered during the dispatch phase ride out
+        here too."""
+        out = self._take_shed()
+        out.extend(self._finish(f.rid, f.env["out"]) for f in finished)
+        return out
 
     # ------------------------------------------------------------------
     def _extra_stats(self, metrics: Metrics) -> dict:

@@ -105,6 +105,10 @@ class DualMeshEngine(EngineBase):
     def step(self) -> list[Completion]:
         """One scheduler slot (see module docstring)."""
         self._start_clock()
+        # shed past-deadline queue entries (ShedPolicy only), unless an
+        # external clock (the fleet executor's slot) already swept
+        shed = (self.shed_expired() if self._ext_clock is None
+                else self._take_shed())
         r = self.runner
         done: list[tuple[int, jax.Array]] = []
         # 1. p-submesh: advance active decode groups (async dispatch —
@@ -126,7 +130,10 @@ class DualMeshEngine(EngineBase):
         n = self.policy.admit(queued=len(self._pending),
                               in_flight=self.in_flight, capacity=capacity)
         for _ in range(max(0, min(n, len(self._pending)))):
-            req, _ticket = self._pop_admission()
+            popped = self._pop_admission()      # None: the rest was shed
+            if popped is None:
+                break
+            req, _ticket = popped
             self._metrics[req.rid].started_at = time.perf_counter()
             st = r.new_stream(req.payload, int(req.gen_steps), rid=req.rid)
             want = st.gen_target
@@ -167,7 +174,7 @@ class DualMeshEngine(EngineBase):
         #    slot is in flight — blocking inside the loops above would
         #    serialize the c/p-submesh overlap (same rule as the CNN
         #    engine's retire phase)
-        return [self._finish(rid, out) for rid, out in done]
+        return shed + [self._finish(rid, out) for rid, out in done]
 
     # ------------------------------------------------------------------
     def _extra_stats(self, metrics: Metrics) -> dict:

@@ -73,14 +73,19 @@ class StubEngine(EngineBase):
                               capacity=self.capacity)
         for _ in range(max(0, min(n, len(self._pending),
                                   self.capacity - len(self._flight)))):
-            req, _t = self._pop_admission()
+            popped = self._pop_admission()      # None: the rest was shed
+            if popped is None:
+                break
+            req, _t = popped
             self._metrics[req.rid].started_at = time.perf_counter()
             self._flight.append([self.service_steps, req.rid, req.payload])
         return finished
 
     def retire(self, finished):
-        return [self._finish(rid, payload)
-                for _, rid, payload in finished]
+        out = self._take_shed()
+        out.extend(self._finish(rid, payload)
+                   for _, rid, payload in finished)
+        return out
 
     def step(self):
         return self.retire(self.advance())

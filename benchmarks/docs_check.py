@@ -1,0 +1,84 @@
+"""Docs drift check: every command the docs show must still answer.
+
+Extracts each ``python -m <module>`` invocation from README.md and
+docs/operations.md (fenced blocks, inline code, prose — any mention
+must resolve) and runs the module with
+``--help`` (PYTHONPATH=src, repo root as cwd), expecting exit 0 — so a
+renamed module, a deleted bench, or a broken argparse surface fails CI
+instead of rotting silently in the docs.  Only module *resolution and
+CLI parsing* are checked; the benches' full runs are the perf job's.
+
+    python -m benchmarks.docs_check [--verbose]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ("README.md", os.path.join("docs", "operations.md"))
+
+_INVOKE = re.compile(r"python\s+-m\s+([A-Za-z_][\w.]*)")
+
+
+def doc_modules(paths=DOCS) -> dict[str, list[str]]:
+    """``{module: [doc files that invoke it]}`` across the whole docs."""
+    out: dict[str, list[str]] = {}
+    for rel in paths:
+        with open(os.path.join(REPO, rel)) as f:
+            text = f.read()
+        for mod in _INVOKE.findall(text):
+            out.setdefault(mod, [])
+            if rel not in out[mod]:
+                out[mod].append(rel)
+    return out
+
+
+def check_module(mod: str) -> tuple[bool, str]:
+    """Run ``python -m mod --help``; (ok, trimmed output or error)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run([sys.executable, "-m", mod, "--help"],
+                          cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=120)
+    ok = proc.returncode == 0
+    tail = (proc.stdout + proc.stderr).strip().splitlines()
+    return ok, tail[-1] if tail else ""
+
+
+def main(argv=None) -> int:
+    """Check every doc-referenced module; exit 1 on the first rot."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--verbose", action="store_true",
+                    help="print each module as it is checked")
+    args = ap.parse_args(argv)
+
+    mods = doc_modules()
+    if not mods:
+        print("docs_check: no `python -m` invocations found — the "
+              "extraction regex or the docs changed shape", file=sys.stderr)
+        return 1
+    failed = []
+    for mod, sources in sorted(mods.items()):
+        ok, tail = check_module(mod)
+        status = "ok" if ok else "FAIL"
+        if args.verbose or not ok:
+            print(f"[docs_check] {status:<4} {mod}  "
+                  f"(from {', '.join(sources)})"
+                  + ("" if ok else f": {tail}"))
+        if not ok:
+            failed.append(mod)
+    print(f"docs_check: {len(mods) - len(failed)}/{len(mods)} "
+          f"doc-referenced modules answer --help")
+    if failed:
+        print(f"docs_check: rotted: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

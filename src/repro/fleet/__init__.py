@@ -24,16 +24,29 @@ executor retries within a :class:`RecoveryConfig` budget, the router
 recovers crashed pools' un-retired requests onto survivors, and every
 recovery decision lands in a seq-watermarked event log that replays
 bitwise alongside the instruction streams.
+
+Closed-loop SLO adaptation (DESIGN.md §13): a :class:`ControlLoop`
+attached to a fleet observes a sliding completion window every K slots
+and injects SET_PARAM (member weight, LM fusion width) and REBALANCE
+instructions into the recorded stream, with a seq-watermarked decision
+log as the audit trail — controlled runs replay bitwise with no
+controller attached.
 """
 from repro.fleet.compiler import (SlotCompiler, compile_fleet,
                                   stream_signature, validate_stream)
+from repro.fleet.control import (ControlAction, ControlLoop, Decision,
+                                 RebalanceTheta, Retune, Reweight,
+                                 decisions_from_json, decisions_to_json,
+                                 dump_decisions, load_decisions,
+                                 lower_action, verify_decisions)
 from repro.fleet.engine import FleetEngine, Member, build_cnn_fleet
 from repro.fleet.executor import MultiPoolRouter, PoolExecutor
 from repro.fleet.faults import (Fault, FaultInjector, FaultPlan,
                                 InjectedFault, PoolCrash, RecoveryConfig)
-from repro.fleet.instructions import (SCHEMA_VERSION, ExecRecord, Free,
-                                      Instruction, Rebalance, Recv, Run,
-                                      Send, dump_stream, load_stream,
+from repro.fleet.instructions import (COMPAT_VERSIONS, SCHEMA_VERSION,
+                                      ExecRecord, Free, Instruction,
+                                      Rebalance, Recv, Run, Send, SetParam,
+                                      dump_stream, load_stream,
                                       stream_from_json, stream_to_json)
 from repro.fleet.planner import (FleetPlan, mix_schedule, normalize_mix,
                                  plan_fleet, plan_rows)
@@ -43,7 +56,11 @@ from repro.fleet.router import (POLICY_NAMES, DeadlineEDF, MemberView,
                                 ShortestQueue, WeightedFair, make_policy)
 
 __all__ = [
+    "COMPAT_VERSIONS",
+    "ControlAction",
+    "ControlLoop",
     "DeadlineEDF",
+    "Decision",
     "DevicePool",
     "ExecRecord",
     "Fault",
@@ -62,21 +79,30 @@ __all__ = [
     "PoolCrash",
     "PoolExecutor",
     "Rebalance",
+    "RebalanceTheta",
     "RecoveryConfig",
     "Recv",
+    "Retune",
+    "Reweight",
     "RoundRobin",
     "Router",
     "Run",
     "SCHEMA_VERSION",
     "SchedulingPolicy",
     "Send",
+    "SetParam",
     "ShortestQueue",
     "SlotCompiler",
     "WeightedFair",
     "build_cnn_fleet",
     "compile_fleet",
+    "decisions_from_json",
+    "decisions_to_json",
+    "dump_decisions",
     "dump_stream",
+    "load_decisions",
     "load_stream",
+    "lower_action",
     "make_policy",
     "mix_schedule",
     "normalize_mix",
@@ -86,4 +112,5 @@ __all__ = [
     "stream_signature",
     "stream_to_json",
     "validate_stream",
+    "verify_decisions",
 ]

@@ -77,10 +77,12 @@ class SlotCompiler:
 
     @property
     def uses_deadlines(self) -> bool:
+        """True when the scheduling policy orders by request deadlines."""
         return getattr(self.policy, "uses_deadlines", False)
 
     @property
     def wants_cores(self) -> bool:
+        """True when co-dispatch needs each member's dominant core."""
         return self.co_dispatch is None or self.co_dispatch > 0
 
     def lower_slot(self, views: Sequence[MemberView],
@@ -165,6 +167,7 @@ class MemberModel:
     # -- construction ---------------------------------------------------
     @classmethod
     def of_engine(cls, name: str, engine) -> "MemberModel":
+        """Build the device-free mirror of one live member engine."""
         runner = getattr(engine, "runner", None)
         if runner is not None and hasattr(runner, "plan"):
             sched = runner.plan.exec_schedule
@@ -191,21 +194,26 @@ class MemberModel:
     # -- the engine-shaped surface `observe` reads ----------------------
     @property
     def has_work(self) -> bool:
+        """True while the mirror holds queued or in-flight work."""
         return bool(self._pending or self._flight)
 
     @property
     def queued(self) -> int:
+        """Requests waiting for admission."""
         return len(self._pending)
 
     @property
     def in_flight(self) -> int:
+        """Streams currently in the mirrored pipeline."""
         return len(self._flight)
 
     def pending_requests(self) -> list[Request]:
+        """Snapshot of the queued (unadmitted) requests."""
         return list(self._pending)
 
     @property
     def next_core(self) -> str | None:
+        """Dominant core of the next dispatch (None when idle)."""
         if not self.has_work:
             return None
         if self.kind == "service":
@@ -299,6 +307,14 @@ def compile_fleet(fleet, requests: Sequence[Request],
     only contribute their routing/ordering metadata (model tag, deadline,
     priority); payloads never enter the stream.
     """
+    if getattr(fleet, "controller", None) is not None:
+        raise CompileError(
+            "cannot compile a fleet with a ControlLoop attached: the "
+            "controller's decisions depend on observed latencies and "
+            "arrival timing, which no device-free mirror can predict "
+            "ahead of time; drive the live FleetEngine (its step() "
+            "records every injected SET_PARAM/REBALANCE) and replay the "
+            "recorded stream")
     models: dict[str, MemberModel] = {
         m.name: MemberModel.of_engine(m.name, m.engine)
         for m in fleet.members}

@@ -145,18 +145,26 @@ class FleetEngine(EngineBase):
         # executed stream — ``self.stream``); a MultiPoolRouter re-homes
         # this executor to give it a pool name and SEND/RECV transport
         self.executor = PoolExecutor(self)
+        # closed-loop controller (fleet.control.ControlLoop attaches
+        # itself here); consulted once per executed slot — its actions
+        # inject SET_PARAM/REBALANCE into the recorded stream, so a
+        # controlled run replays with no controller attached (§13)
+        self.controller = None
 
     # ------------------------------------------------------------------
     @property
     def has_work(self) -> bool:
+        """True while any member holds queued or in-flight work."""
         return any(m.engine.has_work for m in self.members)
 
     @property
     def in_flight(self) -> int:
+        """Total admitted requests across members."""
         return sum(m.engine.in_flight for m in self.members)
 
     @property
     def queued(self) -> int:
+        """Total queued (unadmitted) requests across members."""
         return sum(m.engine.queued for m in self.members)
 
     # ------------------------------------------------------------------
@@ -225,6 +233,8 @@ class FleetEngine(EngineBase):
         instrs = compiler.lower_slot(views, self._dispatches)
         done = self.executor.execute_slot(instrs, self._slot)
         self._slot += 1
+        if self.controller is not None:
+            self.controller.on_slot(done)
         return done
 
     def withdraw_pending(self, max_n: int | None = None, *,
@@ -297,6 +307,8 @@ class FleetEngine(EngineBase):
                "per_model": metrics.by_model()}
         if self.pool is not None:
             out["pool"] = self.pool.stats()
+        if self.controller is not None:
+            out["control"] = self.controller.stats()
         return out
 
 

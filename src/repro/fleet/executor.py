@@ -42,7 +42,7 @@ from typing import Mapping, Sequence
 from repro.fleet.faults import (FaultInjector, InjectedFault, PoolCrash,
                                 RecoveryConfig)
 from repro.fleet.instructions import (ExecRecord, Free, Instruction, Recv,
-                                      Rebalance, Run, Send)
+                                      Rebalance, Run, Send, SetParam)
 from repro.serving.api import (Completion, EngineBase, QueueFull, Request,
                                RequestMetrics, Ticket)
 
@@ -194,6 +194,8 @@ class PoolExecutor:
                                            instr.count, fleet.submit)
         elif isinstance(instr, Rebalance):
             self._rebalance(instr.theta)
+        elif isinstance(instr, SetParam):
+            self._set_param(instr)
         else:
             raise TypeError(f"unknown fleet instruction {instr!r}")
         t1 = time.perf_counter()
@@ -224,6 +226,31 @@ class PoolExecutor:
         """Execute one out-of-band instruction (migration, rebalance) at
         the pool's current slot, recording it in the stream."""
         return self.execute(instr, self.fleet._slot)
+
+    # ------------------------------------------------------------------
+    def _set_param(self, instr: SetParam) -> None:
+        """Apply one SET_PARAM: ``weight`` mutates the member's fleet
+        share directly; any other param dispatches to the member
+        engine's ``retune()`` hook (e.g. the LM ``group_size``).  The
+        mutation is a recorded instruction, so replaying the stream
+        re-applies it at the same position — controlled runs stay
+        bitwise replayable with no controller attached (§13)."""
+        fleet = self.fleet
+        m = fleet._by_name.get(instr.member)
+        if m is None:
+            raise KeyError(f"SET_PARAM for unknown member "
+                           f"{instr.member!r} (members: "
+                           f"{[x.name for x in fleet.members]})")
+        if instr.param == "weight":
+            m.weight = float(instr.value)
+            return
+        retune = getattr(m.engine, "retune", None)
+        if retune is None:
+            raise RuntimeError(
+                f"member {instr.member!r} has no retune() hook; cannot "
+                f"SET_PARAM {instr.param!r} (only 'weight' applies to "
+                f"every member)")
+        retune(**{instr.param: instr.value})
 
     # ------------------------------------------------------------------
     def _rebalance(self, theta: float) -> None:
@@ -388,14 +415,17 @@ class MultiPoolRouter(EngineBase):
     # ------------------------------------------------------------------
     @property
     def pools(self) -> list[str]:
+        """Pool names, in construction order."""
         return list(self.executors)
 
     @property
     def alive(self) -> list[str]:
+        """Pool names not marked dead."""
         return [n for n in self.executors if n not in self.dead]
 
     @property
     def in_transit(self) -> int:
+        """Requests currently riding the SEND/RECV mailbox."""
         return sum(len(box) for box in self._mail.values())
 
     @property
@@ -403,17 +433,21 @@ class MultiPoolRouter(EngineBase):
         # a dead pool's fleet may hold phantom queued/in-flight state —
         # its requests were already re-routed or failed, so it does not
         # count as outstanding work
+        """True while any live pool, the mailbox, or retry/recovery backlogs
+        hold work."""
         return (any(self.executors[n].fleet.has_work for n in self.alive)
                 or self.in_transit > 0 or bool(self._retry)
                 or bool(self._recovery_done))
 
     @property
     def queued(self) -> int:
+        """Queued requests across live pools, mailbox, and retry backlog."""
         return (sum(self.executors[n].fleet.queued for n in self.alive)
                 + self.in_transit + len(self._retry))
 
     @property
     def in_flight(self) -> int:
+        """Admitted requests across live pools."""
         return sum(self.executors[n].fleet.in_flight for n in self.alive)
 
     # ------------------------------------------------------------------
@@ -713,6 +747,8 @@ class MultiPoolRouter(EngineBase):
 
     # transport surface used by PoolExecutor SEND/RECV ------------------
     def send(self, src: str, dst: str, pairs) -> int:
+        """Deliver withdrawn requests into the (src, dst) mailbox; replay
+        re-drops recorded losses."""
         if self._seq.n in self._replay_drops:
             # replaying a recorded run whose live SEND was dropped: the
             # payloads must vanish here too, or the later RECV delivers
@@ -745,6 +781,8 @@ class MultiPoolRouter(EngineBase):
         return len(pairs)
 
     def recv(self, dst: str, src: str, count: int | None, submit) -> int:
+        """Drain up to ``count`` mailbox payloads into ``submit`` on the
+        destination pool."""
         box = self._mail.get((src, dst))
         n = 0
         while box and (count is None or n < count):

@@ -109,11 +109,13 @@ class FaultPlan:
         self.faults = tuple(self.faults)
 
     def to_json(self) -> dict:
+        """Serialize to the ``--faults PLAN.json`` document format."""
         return {"version": 1, "seed": self.seed,
                 "faults": [dataclasses.asdict(f) for f in self.faults]}
 
     @classmethod
     def from_json(cls, doc: dict) -> "FaultPlan":
+        """Parse a plan document; unknown versions or fields raise."""
         if not isinstance(doc, dict):
             raise ValueError(f"a fault plan is a JSON object "
                              f"(got {type(doc).__name__})")
@@ -138,11 +140,13 @@ class FaultPlan:
         return cls(faults=tuple(faults), seed=doc.get("seed"))
 
     def dump(self, path: str) -> None:
+        """Write :meth:`to_json` to ``path``."""
         with open(path, "w") as f:
             json.dump(self.to_json(), f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "FaultPlan":
+        """Read and validate a plan written by :meth:`dump`."""
         with open(path) as f:
             try:
                 doc = json.load(f)
@@ -251,6 +255,8 @@ class FaultInjector:
         self.fired = [0] * len(plan.faults)
 
     def before(self, pool: str, instr, slot: int) -> None:
+        """Fire any armed fault at this instruction boundary (called per
+        executed instruction)."""
         op = getattr(instr, "op", None)
         for i, f in enumerate(self.plan.faults):
             if f.pool != pool or slot < f.slot:
@@ -283,6 +289,7 @@ class FaultInjector:
         return False
 
     def summary(self) -> dict:
+        """Per-fault fire counts, for bench reports and run summaries."""
         return {"seed": self.plan.seed,
                 "faults": [{"kind": f.kind, "pool": f.pool,
                             "slot": f.slot, "fired": n}

@@ -20,6 +20,9 @@ paper's own overlay ISA makes in ``core/isa.py``):
   RECV       accept requests a peer SENT and enqueue them on the member
   REBALANCE  re-split this pool's c/p submeshes at a new theta (dynamic
              re-leasing when the observed traffic mix drifts)
+  SET_PARAM  set one tunable of a member mid-run (fleet weight share, LM
+             decode fusion width) — how the §13 control loop's decisions
+             land in the stream (schema v2)
 
 Instructions are plain frozen dataclasses, JSON-serializable under a
 versioned schema (:data:`SCHEMA_VERSION`); :class:`ExecRecord` wraps one
@@ -28,6 +31,12 @@ count and wall-clock window — the executed stream is what round-trips
 through JSON (``stream_to_json`` / ``stream_from_json``), replays through
 ``fleet.executor.PoolExecutor.replay``, and exports to Chrome tracing
 (``benchmarks/trace_export.py``).
+
+Schema v2 adds SET_PARAM and nothing else.  The compatibility rule: a v1
+stream is a valid v2 stream (no v1 op changed shape or meaning), so v1
+recordings replay unchanged; a stream that *claims* version 1 but
+contains SET_PARAM is schema drift and a hard error, like any unknown
+op or field.
 """
 from __future__ import annotations
 
@@ -35,9 +44,16 @@ import dataclasses
 import json
 from typing import Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
-OPS = ("RUN", "FREE", "SEND", "RECV", "REBALANCE")
+#: schema versions ``stream_from_json`` accepts: v1 streams predate
+#: SET_PARAM but are otherwise identical, and must replay unchanged
+COMPAT_VERSIONS = (1, 2)
+
+OPS = ("RUN", "FREE", "SEND", "RECV", "REBALANCE", "SET_PARAM")
+
+#: ops only a ``version >= 2`` stream may carry
+_V2_OPS = ("SET_PARAM",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,10 +124,30 @@ class Rebalance:
     op = "REBALANCE"
 
 
-Instruction = Run | Free | Send | Recv | Rebalance
+@dataclasses.dataclass(frozen=True)
+class SetParam:
+    """Set one tunable parameter of ``member`` mid-run (schema v2).
+
+    ``param`` is either ``"weight"`` (the member's fleet share, applied
+    by the executor directly) or the name of a keyword the member
+    engine's ``retune()`` hook accepts (e.g. ``"group_size"``, the LM
+    decode fusion width).  This is how §13 control-loop decisions enter
+    the instruction stream: because the mutation is a recorded
+    instruction rather than a side effect, a controlled run replays
+    bitwise with no controller attached.
+    """
+
+    member: str
+    param: str
+    value: float
+
+    op = "SET_PARAM"
+
+
+Instruction = Run | Free | Send | Recv | Rebalance | SetParam
 
 _OP_TYPES = {"RUN": Run, "FREE": Free, "SEND": Send, "RECV": Recv,
-             "REBALANCE": Rebalance}
+             "REBALANCE": Rebalance, "SET_PARAM": SetParam}
 
 
 @dataclasses.dataclass
@@ -135,12 +171,14 @@ class ExecRecord:
 
 
 def instr_to_dict(instr: Instruction) -> dict:
+    """One instruction -> its JSON record (``op`` plus fields)."""
     d = {"op": instr.op}
     d.update(dataclasses.asdict(instr))
     return d
 
 
 def instr_from_dict(d: dict) -> Instruction:
+    """Inverse of :func:`instr_to_dict`; unknown ops or fields raise."""
     d = dict(d)
     op = d.pop("op", None)
     if op not in _OP_TYPES:
@@ -176,10 +214,23 @@ def stream_to_json(records: Sequence[ExecRecord], *,
 
 
 def stream_from_json(doc: dict) -> list[ExecRecord]:
+    """Deserialize a stream, accepting any :data:`COMPAT_VERSIONS` schema.
+
+    v1 streams (pre-SET_PARAM) load and replay unchanged; a v1 document
+    that nevertheless carries a v2-only op is schema drift and raises.
+    """
     version = doc.get("version")
-    if version != SCHEMA_VERSION:
+    if version not in COMPAT_VERSIONS:
         raise ValueError(f"fleet instruction stream schema version "
-                         f"{version!r} != supported {SCHEMA_VERSION}")
+                         f"{version!r} not in supported {COMPAT_VERSIONS}")
+    if version < SCHEMA_VERSION:
+        drift = [r["instr"].get("op") for r in doc["records"]
+                 if r["instr"].get("op") in _V2_OPS]
+        if drift:
+            raise ValueError(
+                f"stream claims schema version {version} but contains "
+                f"version-{SCHEMA_VERSION} ops {sorted(set(drift))} "
+                f"(schema drift)")
     return [ExecRecord(instr=instr_from_dict(r["instr"]), slot=r["slot"],
                        seq=r.get("seq", 0), advances=r.get("advances", 0),
                        t0=r.get("t0"), t1=r.get("t1"),
@@ -189,10 +240,12 @@ def stream_from_json(doc: dict) -> list[ExecRecord]:
 
 def dump_stream(records: Sequence[ExecRecord], path: str, *,
                 pool: str | None = None) -> None:
+    """Write :func:`stream_to_json` to ``path``."""
     with open(path, "w") as f:
         json.dump(stream_to_json(records, pool=pool), f, indent=1)
 
 
 def load_stream(path: str) -> list[ExecRecord]:
+    """Read a stream document written by :func:`dump_stream`."""
     with open(path) as f:
         return stream_from_json(json.load(f))

@@ -48,6 +48,8 @@ class FleetPlan:
         # lands in BENCH_fleet.json, where compare_bench gates the
         # aggregate_fps leaf — this is a deterministic cycle-domain
         # prediction, not a measurement, and must not be gated as one
+        """JSON-ready summary of the planned config (lands in
+        BENCH_fleet.json)."""
         return {"mix": {m: round(s, 4) for m, s in self.mix.items()},
                 "config": str(self.config),
                 "theta": round(self.theta, 4),

@@ -50,10 +50,12 @@ class DevicePool:
     # ------------------------------------------------------------------
     @property
     def c_chips(self) -> int:
+        """Devices currently leased to the c-submesh."""
         return self.dual.c_chips
 
     @property
     def p_chips(self) -> int:
+        """Devices currently leased to the p-submesh."""
         return self.dual.p_chips
 
     @property
@@ -64,6 +66,7 @@ class DevicePool:
 
     @property
     def leases(self) -> list[str]:
+        """Names currently holding a lease on the shared split."""
         return list(self._leases)
 
     # ------------------------------------------------------------------
@@ -76,6 +79,7 @@ class DevicePool:
         return self.dual
 
     def release(self, name: str) -> None:
+        """Release ``name``'s lease; unknown names raise KeyError."""
         if name not in self._leases:
             raise KeyError(f"no lease named {name!r} "
                            f"(held: {sorted(self._leases)})")
@@ -104,6 +108,7 @@ class DevicePool:
         return self.dual
 
     def stats(self) -> dict:
+        """Pool summary: device count, theta, split sizes, lease holders."""
         return {"devices": len(self.devices),
                 "theta": self.dual.theta,
                 "c_chips": self.c_chips,

@@ -59,6 +59,7 @@ class MemberView:
 
     @property
     def outstanding(self) -> int:
+        """Queued plus in-flight work owned by this member."""
         return self.queued + self.in_flight
 
 
@@ -82,6 +83,7 @@ class RoundRobin:
 
     def pick(self, views: Sequence[MemberView],
              total_dispatches: int) -> int:
+        """Pick the first member with work after the last pick."""
         after = [v for v in views if v.index > self._last]
         v = (after or views)[0]
         self._last = v.index
@@ -94,6 +96,7 @@ class ShortestQueue:
 
     def pick(self, views: Sequence[MemberView],
              total_dispatches: int) -> int:
+        """Pick the member with the least outstanding work."""
         return min(views, key=lambda v: (v.outstanding, v.index)).index
 
 
@@ -107,6 +110,7 @@ class WeightedFair:
 
     def pick(self, views: Sequence[MemberView],
              total_dispatches: int) -> int:
+        """Pick the member furthest below its weighted entitlement."""
         wsum = sum(v.weight for v in views)
 
         def deficit(v: MemberView) -> float:
@@ -131,6 +135,7 @@ class DeadlineEDF:
 
     def pick(self, views: Sequence[MemberView],
              total_dispatches: int) -> int:
+        """Pick the member whose head request expires first."""
         return min(views,
                    key=lambda v: (v.head_deadline is None,
                                   v.head_deadline
@@ -154,20 +159,31 @@ def make_policy(name: str) -> SchedulingPolicy:
 # routing
 # --------------------------------------------------------------------------
 class Router:
-    """Model-tag -> member routing table."""
+    """Model-tag -> member routing table.
+
+    The router also tallies arrivals per member (:attr:`routed`, counted
+    at route time, before any admission decision) — the fleet's
+    arrival-side view of the traffic mix, which the §13 control loop
+    diffs between observations to estimate the live qps mix.  Queue
+    depth alone cannot distinguish "more arrivals" from "slower
+    service"; the arrival tally can.
+    """
 
     def __init__(self, names: Sequence[str]):
+        """Build the table over member ``names`` (model tags)."""
         if not names:
             raise ValueError("a fleet needs at least one member")
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate member names: {list(names)}")
         self.names = list(names)
+        self.routed: dict[str, int] = {n: 0 for n in self.names}
 
     def route(self, request: Request) -> str:
         """Member name serving this request's model tag.  Untagged
         requests are only routable in a single-member fleet."""
         if request.model is None:
             if len(self.names) == 1:
+                self.routed[self.names[0]] += 1
                 return self.names[0]
             raise KeyError(f"untagged request in a {len(self.names)}-member "
                            f"fleet; set Request.model to one of "
@@ -175,4 +191,5 @@ class Router:
         if request.model not in self.names:
             raise KeyError(f"no member serves model {request.model!r} "
                            f"(members: {self.names})")
+        self.routed[request.model] += 1
         return request.model

@@ -5,7 +5,7 @@ Chrome trace-event JSON format (the ``chrome://tracing`` / Perfetto
 timeline — same target format as the Helium repo's tarmac converter):
 one *process* row per pool, one *thread* track per submesh within it
 ('c-submesh', 'p-submesh'), plus a 'retire' track for FREEs and a
-'control' track for SEND/RECV/REBALANCE — so pipeline bubbles (a submesh
+'control' track for SEND/RECV/REBALANCE/SET_PARAM — so pipeline bubbles (a submesh
 track with a gap while the other is busy) are visible at a glance.
 
 Only executed records carry wall-clock stamps; compiled-only records
@@ -18,7 +18,7 @@ import json
 from typing import Mapping, Sequence
 
 from repro.fleet.instructions import (ExecRecord, Free, Rebalance, Recv,
-                                      Run, Send)
+                                      Run, Send, SetParam)
 
 # track (tid) layout within each pool's process row; lower sorts first
 _TRACKS = ("c-submesh", "p-submesh", "retire", "control")
@@ -47,6 +47,8 @@ def _label(instr, advances: int) -> str:
         return f"RECV <- {instr.peer} x{advances}"
     if isinstance(instr, Rebalance):
         return f"REBALANCE theta={instr.theta:.2f}"
+    if isinstance(instr, SetParam):
+        return f"SET {instr.member}.{instr.param}={instr.value}"
     return type(instr).__name__
 
 

@@ -67,6 +67,17 @@ Fleet (several CNNs multiplexed over one device pool, DESIGN.md §10):
   retried and recovered per DESIGN.md §12 (crash recovery needs
   ``--pools >= 2``).  A malformed plan or a non-positive SLO is a usage
   error (exit 2).
+
+  ``--adapt`` attaches a closed-loop controller (DESIGN.md §13,
+  ``repro.fleet.ControlLoop``) to each pool's fleet: every
+  ``--control-interval`` slots it observes the sliding completion window
+  and injects SET_PARAM / REBALANCE instructions — re-weighting member
+  shares toward the observed arrival mix, narrowing/widening retunable
+  engines' fusion width on p95 SLO breaches (needs ``--slo-ms``), and
+  re-leasing theta on sustained shedding.  The summary reports the
+  decisions taken; the injected instructions land in the recorded
+  stream, so ``--trace`` shows them on the control track and the run
+  replays bitwise without the controller.
 """
 from __future__ import annotations
 
@@ -209,6 +220,9 @@ def serve_fleet(args) -> int:
         _fail(f"--pools must be >= 1, got {args.pools}")
     if args.slo_ms is not None and not args.slo_ms > 0:
         _fail(f"--slo-ms must be > 0, got {args.slo_ms}")
+    if args.control_interval < 1:
+        _fail(f"--control-interval must be >= 1, got "
+              f"{args.control_interval}")
     fault_plan = None
     if args.faults is not None:
         try:
@@ -242,8 +256,17 @@ def serve_fleet(args) -> int:
     requests = [Request(x, model=t) for x, t in zip(images, tags)]
     arrivals = _arrivals(n, args.arrival_rate)
 
+    def attach_controller(fleet_engine):
+        if not args.adapt:
+            return None
+        from repro.fleet import ControlLoop
+
+        return ControlLoop(fleet_engine, interval=args.control_interval,
+                           slo_ms=args.slo_ms, plan_evals=args.plan_evals)
+
     if args.pools == 1:
         engine, pool = build()
+        controller = attach_controller(engine)
         if fault_plan is not None:
             engine.executor.injector = FaultInjector(fault_plan)
         for m in engine.members:         # warm each member's per-group jits
@@ -281,9 +304,18 @@ def serve_fleet(args) -> int:
             print(f"[serve] goodput {st['goodput_fps']:.2f} fps "
                   f"(shed {res.metrics.count('shed')}, "
                   f"retries {engine.executor.retries})")
+        if controller is not None:
+            cs = controller.stats()
+            weights = ", ".join(f"{m.name}={m.weight:.2f}"
+                                for m in engine.members)
+            print(f"[serve] control: {cs['observations']} observations, "
+                  f"{cs['decisions']} decisions {cs['by_kind'] or '{}'}; "
+                  f"final weights {weights}")
         streams = {"pool0": engine.stream}
     else:
         fleets = {f"pool{p}": build()[0] for p in range(args.pools)}
+        controllers = {name: attach_controller(fl)
+                       for name, fl in fleets.items()} if args.adapt else {}
         router = MultiPoolRouter(
             fleets, injector=(FaultInjector(fault_plan)
                               if fault_plan is not None else None))
@@ -312,6 +344,12 @@ def serve_fleet(args) -> int:
                   f"recovered {st['recovered']}, dead pools "
                   f"{st['dead'] or '-'}, duplicates dropped "
                   f"{st['duplicates_dropped']})")
+        for pname, ctl in controllers.items():
+            if ctl is not None:
+                cs = ctl.stats()
+                print(f"[serve] control {pname}: {cs['observations']} "
+                      f"observations, {cs['decisions']} decisions "
+                      f"{cs['by_kind'] or '{}'}")
         streams = {name: ex.records
                    for name, ex in router.executors.items()}
     if args.trace:
@@ -480,6 +518,19 @@ def main(argv=None):
                             "every member under a ShedPolicy that drops "
                             "past-deadline queue entries and report "
                             "goodput (served AND within SLO)")
+    fleet.add_argument("--adapt", action="store_true",
+                       help="attach a closed-loop controller (DESIGN.md "
+                            "§13) to each pool: observe the completion "
+                            "window every --control-interval slots and "
+                            "inject SET_PARAM/REBALANCE — reweight "
+                            "members toward the observed mix, retune "
+                            "fusion width on p95 breaches (with "
+                            "--slo-ms), re-lease theta on sustained "
+                            "shedding")
+    fleet.add_argument("--control-interval", type=int, default=8,
+                       metavar="K",
+                       help="fleet slots between controller observations "
+                            "(with --adapt; default 8)")
     _add_common(fleet)
     fleet.set_defaults(func=serve_fleet)
 

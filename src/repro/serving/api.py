@@ -95,16 +95,19 @@ class RequestMetrics:
 
     @property
     def wait_s(self) -> float:
+        """Queue wait before admission, in seconds."""
         return (self.started_at or self.submitted_at) - self.submitted_at
 
     @property
     def service_s(self) -> float:
+        """Admission-to-finish service time, in seconds."""
         if self.finished_at is None or self.started_at is None:
             return float("nan")
         return self.finished_at - self.started_at
 
     @property
     def latency_s(self) -> float:
+        """Submit-to-finish latency, in seconds."""
         if self.finished_at is None:
             return float("nan")
         return self.finished_at - self.submitted_at
@@ -122,6 +125,7 @@ class Completion:
 
     @property
     def status(self) -> str:
+        """Terminal status of the underlying request."""
         return self.metrics.status
 
 
@@ -147,6 +151,7 @@ class Metrics:
 
     @property
     def completed(self) -> int:
+        """Requests that reached a terminal status."""
         return len(self.requests)
 
     def latencies_ms(self, model: str | None = None) -> list[float]:
@@ -159,6 +164,7 @@ class Metrics:
                 and (model is None or m.model == model)]
 
     def count(self, status: str) -> int:
+        """Completions with the given terminal status."""
         return sum(1 for m in self.requests if m.status == status)
 
     def goodput(self) -> int:
@@ -173,12 +179,15 @@ class Metrics:
         return self.goodput() / self.wall_s if self.wall_s else 0.0
 
     def p50_ms(self) -> float:
+        """Median served latency, in milliseconds."""
         return percentile(self.latencies_ms(), 50)
 
     def p95_ms(self) -> float:
+        """95th-percentile served latency, in milliseconds."""
         return percentile(self.latencies_ms(), 95)
 
     def requests_per_s(self) -> float:
+        """Completions per wall-clock second."""
         if not self.wall_s:
             return float("inf") if self.completed else 0.0
         return self.completed / self.wall_s
@@ -235,6 +244,72 @@ class Metrics:
         return out
 
 
+class MetricsWindow:
+    """Sliding window over the last ``size`` request completions.
+
+    :class:`Metrics` aggregates a whole run; a controller needs the
+    *recent* picture — a mix that flipped five minutes ago should not be
+    averaged against the hour before it.  The window keeps the last
+    ``size`` terminal :class:`RequestMetrics` (fed via :meth:`observe`
+    from each step's completions) and answers the per-model questions
+    the §13 control loop asks: completion share, shed rate, p95 latency.
+    """
+
+    def __init__(self, size: int = 64):
+        """Create a window keeping the most recent ``size`` completions."""
+        if size < 1:
+            raise ValueError(f"window size must be >= 1 (got {size})")
+        self.size = size
+        self._buf: deque[RequestMetrics] = deque(maxlen=size)
+
+    def __len__(self) -> int:
+        """Number of completions currently held (<= ``size``)."""
+        return len(self._buf)
+
+    def observe(self, completions: Sequence[Completion]) -> None:
+        """Absorb one step's completions (oldest entries fall out)."""
+        for c in completions:
+            self._buf.append(c.metrics)
+
+    def clear(self) -> None:
+        """Forget everything (e.g. after a REBALANCE changed the world)."""
+        self._buf.clear()
+
+    def models(self) -> list[str]:
+        """Distinct model tags in the window, in first-seen order."""
+        seen: dict[str, None] = {}
+        for m in self._buf:
+            if m.model is not None:
+                seen.setdefault(m.model, None)
+        return list(seen)
+
+    def stats(self, model: str | None = None) -> dict:
+        """Window stats, optionally restricted to one model tag.
+
+        Returns ``{"n", "served", "shed", "shed_rate", "p95_ms"}`` where
+        ``served`` counts ok/recovered completions, ``shed_rate`` is
+        shed / n (0.0 on an empty slice), and ``p95_ms`` is the served
+        p95 latency (None with nothing served — JSON-safe).
+        """
+        ms = [m for m in self._buf
+              if model is None or m.model == model]
+        lats = [m.latency_s * 1e3 for m in ms
+                if m.finished_at is not None
+                and m.status in ("ok", "recovered")]
+        shed = sum(1 for m in ms if m.status == "shed")
+        return {
+            "n": len(ms),
+            "served": len(lats),
+            "shed": shed,
+            "shed_rate": shed / len(ms) if ms else 0.0,
+            "p95_ms": percentile(lats, 95) if lats else None,
+        }
+
+    def by_model(self) -> dict[str, dict]:
+        """Per-model :meth:`stats`, keyed by model tag."""
+        return {m: self.stats(m) for m in self.models()}
+
+
 @dataclasses.dataclass
 class ServeResult:
     """What ``drain``/``result`` hand back: outputs in submission order,
@@ -274,6 +349,7 @@ class GreedyAdmission:
     """Fill all free capacity every step — maximum occupancy."""
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        """Admit everything the engine has capacity for."""
         return max(0, min(queued, capacity - in_flight))
 
 
@@ -285,6 +361,7 @@ class FixedRateAdmission:
     per_step: int = 1
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        """Admit at most ``per_step`` requests per scheduler step."""
         return max(0, min(queued, self.per_step, capacity - in_flight))
 
 
@@ -298,9 +375,11 @@ class DeadlineAdmission:
     per_step: int = 1
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        """Admit at most ``per_step`` requests per scheduler step."""
         return max(0, min(queued, self.per_step, capacity - in_flight))
 
     def select(self, pending: Sequence[Request]) -> int:
+        """Select the earliest-deadline pending request."""
         return min(range(len(pending)),
                    key=lambda i: (pending[i].deadline is None,
                                   pending[i].deadline
@@ -315,9 +394,11 @@ class PriorityAdmission:
     per_step: int = 1
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        """Admit at most ``per_step`` requests per scheduler step."""
         return max(0, min(queued, self.per_step, capacity - in_flight))
 
     def select(self, pending: Sequence[Request]) -> int:
+        """Select the highest-priority pending request."""
         return min(range(len(pending)),
                    key=lambda i: (-pending[i].priority, i))
 
@@ -367,17 +448,21 @@ class ShedPolicy:
             self.inner = FixedRateAdmission(1)
 
     def now(self, slot_clock: float) -> float:
+        """Current time in the policy's clock domain."""
         return (time.perf_counter() if self.clock == "wall"
                 else float(slot_clock))
 
     def expired(self, deadline: float | None, now: float) -> bool:
+        """True when ``deadline`` has passed at ``now``."""
         return deadline is not None and now > deadline
 
     def admit(self, *, queued: int, in_flight: int, capacity: int) -> int:
+        """Delegate the how-many decision to the inner policy."""
         return self.inner.admit(queued=queued, in_flight=in_flight,
                                 capacity=capacity)
 
     def select(self, pending: Sequence[Request]) -> int:
+        """Delegate selection to the inner policy (FIFO default)."""
         sel = getattr(self.inner, "select", None)
         return 0 if sel is None else int(sel(pending))
 
@@ -389,16 +474,26 @@ class ShedPolicy:
 class Engine(Protocol):
     """The shared serving surface (see module docstring for the contract)."""
 
-    def submit(self, request: Request | Any) -> Ticket: ...
+    def submit(self, request: Request | Any) -> Ticket:
+        """Enqueue one request and return its ticket."""
+        ...
 
-    def step(self) -> list[Completion]: ...
+    def step(self) -> list[Completion]:
+        """Advance the pipeline one slot; return newly finished work."""
+        ...
 
-    def drain(self) -> ServeResult: ...
+    def drain(self) -> ServeResult:
+        """Step until idle, then return the full result."""
+        ...
 
-    def result(self) -> ServeResult: ...
+    def result(self) -> ServeResult:
+        """Snapshot of completions and metrics so far."""
+        ...
 
     @property
-    def has_work(self) -> bool: ...
+    def has_work(self) -> bool:
+        """True while any queued or in-flight work remains."""
+        ...
 
 
 # --------------------------------------------------------------------------
@@ -433,6 +528,7 @@ class EngineBase:
 
     @property
     def queued(self) -> int:
+        """Requests waiting for admission."""
         return len(self._pending)
 
     def pending_requests(self) -> list[Request]:

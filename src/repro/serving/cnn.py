@@ -76,10 +76,12 @@ class DualCoreEngine(EngineBase):
     # ------------------------------------------------------------------
     @property
     def in_flight(self) -> int:
+        """Streams currently in the pipeline."""
         return len(self._flight)
 
     @property
     def has_work(self) -> bool:
+        """True while any queued or in-flight work remains."""
         return bool(self._pending or self._flight)
 
     def next_dispatch_cycles(self) -> tuple[float, float]:

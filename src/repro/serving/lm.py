@@ -72,14 +72,17 @@ class DualMeshEngine(EngineBase):
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.fused_sizes: list[int] = []
+        self.retunes: list[tuple[int, dict]] = []   # mid-run knob changes
 
     # ------------------------------------------------------------------
     @property
     def in_flight(self) -> int:
+        """Requests currently prefilling or decoding."""
         return len(self._ready) + sum(len(g.members) for g in self._groups)
 
     @property
     def has_work(self) -> bool:
+        """True while any queued or in-flight work remains."""
         return bool(self._pending or self._ready or self._groups)
 
     def next_dispatch_cycles(self) -> tuple[float, float]:
@@ -96,6 +99,7 @@ class DualMeshEngine(EngineBase):
 
     @property
     def next_core(self) -> str | None:
+        """Dominant core of the next dispatch (None when idle)."""
         if not self.has_work:
             return None
         c, p = self.next_dispatch_cycles()
@@ -177,12 +181,51 @@ class DualMeshEngine(EngineBase):
         return shed + [self._finish(rid, out) for rid, out in done]
 
     # ------------------------------------------------------------------
+    def retune(self, *, group_size: int | None = None,
+               quantum: int | None = None,
+               prefill_chunk: int | None = None) -> dict:
+        """Adjust serving knobs mid-run (the SET_PARAM / §13 hook).
+
+        Only the knobs passed change; each affects work scheduled *after*
+        the call — in-flight decode groups keep the width they were fused
+        at (re-fusing a live group would re-jit mid-request), so a
+        ``group_size`` change takes effect at the next fuse.  Returns the
+        knobs' new values.  Every retune is logged on :attr:`retunes` as
+        ``(slot-ordinal, {knob: value})`` for the stats breakdown.
+        """
+        changed: dict[str, int | None] = {}
+        if group_size is not None:
+            gs = int(group_size)
+            if gs < 1:
+                raise ValueError(f"group_size must be >= 1 (got {gs})")
+            self.group_size = gs
+            changed["group_size"] = gs
+        if quantum is not None:
+            q = int(quantum)
+            if q < 1:
+                raise ValueError(f"quantum must be >= 1 (got {q})")
+            self.quantum = q
+            changed["quantum"] = q
+        if prefill_chunk is not None:
+            pc = int(prefill_chunk)
+            if pc < 1:
+                raise ValueError(f"prefill_chunk must be >= 1 (got {pc})")
+            self.prefill_chunk = pc
+            changed["prefill_chunk"] = pc
+        if changed:
+            self.retunes.append((len(self.fused_sizes), changed))
+        return {"group_size": self.group_size, "quantum": self.quantum,
+                "prefill_chunk": self.prefill_chunk}
+
+    # ------------------------------------------------------------------
     def _extra_stats(self, metrics: Metrics) -> dict:
         total = self.prefill_tokens + self.decode_tokens
         wall = metrics.wall_s
         return {"engine": "dualmesh",
                 "n_streams": len(self._order),
                 "group_size": self.group_size,
+                "retunes": [{"at_fuse": i, **kv}
+                            for i, kv in self.retunes],
                 "fused_sizes": list(self.fused_sizes),
                 "prefill_tokens": self.prefill_tokens,
                 "decode_tokens": self.decode_tokens,

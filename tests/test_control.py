@@ -1,0 +1,362 @@
+"""Closed-loop SLO adaptation (ISSUE-8 / DESIGN.md §13): SET_PARAM schema
+v2 + v1 compat, MetricsWindow stats, mix-flip reweight convergence, p95
+breach retune + recovery, hysteresis (deadband / band gap / shed arm +
+cooldown + §12 interlock), decision-log audit, and bitwise live-vs-replay
+of a controlled run with no controller attached."""
+import os
+import sys
+from types import SimpleNamespace
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from test_fleet import StubEngine, _stub_fleet  # noqa: E402
+
+from repro.fleet import (ControlLoop, Decision, ExecRecord,  # noqa: E402
+                         FleetEngine, Rebalance, RebalanceTheta, Retune,
+                         Reweight, SetParam, WeightedFair, compile_fleet,
+                         decisions_from_json, decisions_to_json,
+                         lower_action, stream_from_json, stream_signature,
+                         stream_to_json, verify_decisions)
+from repro.fleet.compiler import CompileError  # noqa: E402
+from repro.fleet.control import Observation  # noqa: E402
+from repro.fleet.instructions import Run  # noqa: E402
+from repro.serving import Request, replay  # noqa: E402
+from repro.serving.api import Completion, MetricsWindow, RequestMetrics  # noqa: E402
+
+
+class StubTunable(StubEngine):
+    """A stub member exposing the LM engine's retune surface."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.group_size = 8
+        self.retunes = []
+
+    def retune(self, *, group_size=None):
+        if group_size is not None:
+            if group_size < 1:
+                raise ValueError(f"group_size must be >= 1 (got "
+                                 f"{group_size})")
+            self.group_size = int(group_size)
+            self.retunes.append(int(group_size))
+        return {"group_size": self.group_size}
+
+
+def _obs(slot=0, arrivals=None, queued=None, window=None, shed_rate=0.0,
+         weights=None):
+    return Observation(slot=slot, arrivals=arrivals or {},
+                       queued=queued or {}, window=window or {},
+                       shed_rate=shed_rate, weights=weights or {})
+
+
+def _win(p95):
+    return {"n": 8, "served": 8, "shed": 0, "shed_rate": 0.0, "p95_ms": p95}
+
+
+# --------------------------------------------------------------------------
+# the mix-flip trace shared by the convergence and replay tests
+# --------------------------------------------------------------------------
+_W0 = {"a": 0.75, "b": 0.25}
+
+
+def _flip_fleet(trace=None):
+    return _stub_fleet(cores=("c", "p"), names=list(_W0), weights=_W0,
+                       policy=WeightedFair(), co_dispatch=0, trace=trace)
+
+
+def _flip_trace():
+    """48 one-per-slot arrivals whose mix flips 3:1 -> 1:3 at step 24."""
+    tags = ["a", "a", "a", "b"] * 6 + ["b", "b", "b", "a"] * 6
+    reqs = [Request(i, model=t) for i, t in enumerate(tags)]
+    return reqs, list(range(len(reqs)))
+
+
+# --------------------------------------------------------------------------
+# SET_PARAM schema + executor semantics
+# --------------------------------------------------------------------------
+def test_set_param_round_trip_and_v1_compat():
+    rec = [ExecRecord(instr=SetParam(member="a", param="weight",
+                                     value=0.6),
+                      slot=1, seq=0, advances=0)]
+    rt = stream_from_json(stream_to_json(rec))
+    assert rt[0].instr == rec[0].instr
+    # v1 streams (no SET_PARAM) still load...
+    v1 = stream_to_json([ExecRecord(instr=Run(member="a"), slot=0, seq=0)])
+    v1["version"] = 1
+    assert stream_from_json(v1)[0].instr == Run(member="a")
+    # ...but a v1 doc carrying a v2-only op is schema drift, not data
+    drift = stream_to_json(rec)
+    drift["version"] = 1
+    with pytest.raises(ValueError, match="schema drift"):
+        stream_from_json(drift)
+
+
+def test_set_param_execution_paths():
+    fleet = _flip_fleet()
+    fleet.executor.inject(SetParam(member="b", param="weight", value=0.9))
+    assert fleet._by_name["b"].weight == pytest.approx(0.9)
+    with pytest.raises(KeyError, match="unknown member"):
+        fleet.executor.inject(SetParam(member="zz", param="weight",
+                                       value=0.5))
+    with pytest.raises(RuntimeError, match="retune"):
+        fleet.executor.inject(SetParam(member="a", param="group_size",
+                                       value=4))   # StubEngine: no retune
+
+
+def test_metrics_window_stats():
+    win = MetricsWindow(4)
+    def done(model, status, lat_s):
+        m = RequestMetrics(rid=0, model=model, submitted_at=0.0,
+                           status=status)
+        if status in ("ok", "recovered"):
+            m.finished_at = lat_s
+        return Completion(ticket=SimpleNamespace(rid=0), output=None,
+                          metrics=m)
+    win.observe([done("a", "ok", 0.010), done("a", "shed", 0.0),
+                 done("b", "ok", 0.020)])
+    assert win.stats("a") == {"n": 2, "served": 1, "shed": 1,
+                              "shed_rate": 0.5, "p95_ms": 10.0}
+    assert win.stats()["n"] == 3
+    assert set(win.by_model()) == {"a", "b"}
+    # bounded: a 4th + 5th entry evict the oldest two
+    win.observe([done("b", "ok", 0.030), done("b", "ok", 0.030)])
+    assert len(win) == 4 and win.stats("a")["n"] == 1
+    assert win.stats("zzz") == {"n": 0, "served": 0, "shed": 0,
+                                "shed_rate": 0.0, "p95_ms": None}
+    with pytest.raises(ValueError, match="window size"):
+        MetricsWindow(0)
+
+
+# --------------------------------------------------------------------------
+# reweight: convergence on a seeded mix flip, deadband hysteresis
+# --------------------------------------------------------------------------
+def test_mix_flip_reweights_to_new_mix():
+    fleet = _flip_fleet()
+    ctl = ControlLoop(fleet, interval=8, reweight_deadband=0.15)
+    reqs, arr = _flip_trace()
+    res = replay(fleet, reqs, arr)
+    assert res.metrics.completed == len(reqs)
+
+    rw = [d for d in ctl.decisions if d.action.kind == "reweight"]
+    # one clean flip: exactly one reweight per member, at the first
+    # observation whose window saw the new mix, none before or after
+    assert len(rw) == 2
+    assert {m.name: m.weight for m in fleet.members} == \
+        pytest.approx({"a": 0.25, "b": 0.75})
+    # the evidence in the log is the flipped arrival window
+    for d in rw:
+        assert d.observed["arrivals"] == {"a": 2, "b": 6}
+    # post-decision dispatch share follows the new entitlement: b, now
+    # owed 3x a, wins the primary pick strictly more often
+    seq0 = max(d.seq for d in rw)
+    picks = [r.instr.member for r in fleet.stream
+             if r.seq > seq0 and isinstance(r.instr, Run) and r.instr.primary]
+    assert picks.count("b") > picks.count("a")
+    # controller summary surfaces through the engine's result stats
+    assert res.stats["control"]["by_kind"] == {"reweight": 2}
+    assert res.stats["control"]["decisions"] == 2
+
+
+def test_reweight_deadband_rides_out_wobble():
+    """A mix oscillating inside the deadband must emit nothing."""
+    fleet = _stub_fleet(cores=("c", "p"), names=["a", "b"],
+                        weights={"a": 0.5, "b": 0.5},
+                        policy=WeightedFair(), co_dispatch=0)
+    ctl = ControlLoop(fleet, interval=5, reweight_deadband=0.2)
+    # each 5-arrival window is 0.6/0.4 or 0.4/0.6: TV distance 0.1 from
+    # the 0.5/0.5 weights, inside the deadband every observation
+    tags = (["a", "a", "a", "b", "b"] + ["b", "b", "b", "a", "a"]) * 4
+    reqs = [Request(i, model=t) for i, t in enumerate(tags)]
+    replay(fleet, reqs, list(range(len(reqs))))
+    assert ctl.decisions == []
+    assert ctl.observations > 0
+    assert {m.name: m.weight for m in fleet.members} == {"a": 0.5,
+                                                         "b": 0.5}
+
+
+# --------------------------------------------------------------------------
+# retune: p95 breach narrows the fusion width, recovery widens it back
+# --------------------------------------------------------------------------
+def _tunable_fleet():
+    members = {"lm": StubTunable(core="c", name="lm"),
+               "cnn": StubEngine(core="p", name="cnn")}
+    return FleetEngine(members, policy=WeightedFair(), co_dispatch=0)
+
+
+def test_p95_breach_retunes_and_recovers():
+    fleet = _tunable_fleet()
+    ctl = ControlLoop(fleet, interval=4, slo_ms=100.0, band=(0.5, 1.0))
+    lm = fleet._by_name["lm"].engine
+    hot, cool = _obs(window={"lm": _win(150.0)}), \
+        _obs(window={"lm": _win(40.0)})
+
+    def run(obs):
+        acts = ctl.decide(obs)
+        for a, r in acts:
+            ctl._apply(a, r, obs)
+        return [a for a, _ in acts]
+
+    # hot: one halving per observation, down to the floor, then nothing
+    assert run(hot) == [Retune(member="lm", param="group_size", value=4)]
+    assert lm.group_size == 4
+    assert run(hot) == [Retune(member="lm", param="group_size", value=2)]
+    assert run(hot) == [Retune(member="lm", param="group_size", value=1)]
+    assert run(hot) == [] and lm.group_size == 1       # min_group floor
+    # mid-band: the gap is the hysteresis — nothing moves either way
+    assert run(_obs(window={"lm": _win(70.0)})) == []
+    # cool: one doubling per observation back to the configured width
+    assert run(cool) == [Retune(member="lm", param="group_size", value=2)]
+    assert run(cool) == [Retune(member="lm", param="group_size", value=4)]
+    assert run(cool) == [Retune(member="lm", param="group_size", value=8)]
+    assert lm.group_size == 8 and lm.retunes == [4, 2, 1, 2, 4, 8]
+    # fully recovered: further cool observations are not a breach exit
+    assert run(cool) == []
+    # every retune was injected into the stream and the log matches it
+    assert [r.instr for r in fleet.executor.records] == \
+        [SetParam(member="lm", param="group_size", value=v)
+         for v in (4, 2, 1, 2, 4, 8)]
+    verify_decisions(fleet.executor.records, ctl.decisions)
+
+
+# --------------------------------------------------------------------------
+# shed-rate rebalance: sustain, re-arm, cooldown, and the §12 interlock
+# --------------------------------------------------------------------------
+def test_shed_rebalance_hysteresis_and_cooldown(monkeypatch):
+    import repro.fleet.planner as planner
+    monkeypatch.setattr(planner, "plan_fleet",
+                        lambda mix, max_evals=4:
+                        SimpleNamespace(theta=0.625))
+    fleet = _flip_fleet()
+    fleet.pool = object()           # decide() only checks for a pool
+    ctl = ControlLoop(fleet, interval=4, shed_high=0.25, shed_low=0.05,
+                      sustain=2, cooldown=3)
+    hot = _obs(shed_rate=0.4, weights={"a": 0.5, "b": 0.5})
+    cool, mid = _obs(shed_rate=0.01), _obs(shed_rate=0.15)
+
+    assert ctl.decide(hot) == []                     # streak 1 < sustain
+    fired = ctl.decide(hot)                          # streak 2: fires
+    assert fired == [(RebalanceTheta(theta=0.625), fired[0][1])]
+    assert "shed rate 0.400" in fired[0][1]
+    # disarmed: sustained shedding alone must not fire again...
+    assert ctl.decide(hot) == [] and ctl.decide(hot) == []
+    assert ctl.decide(mid) == []                     # between the bands
+    ctl._cooldown_left = 0                           # cooldown elapsed
+    assert ctl.decide(hot) == []                     # still disarmed
+    # ...until the rate drops below shed_low (re-arm), and sustains again
+    assert ctl.decide(cool) == []
+    assert ctl.decide(hot) == []
+    assert len(ctl.decide(hot)) == 1
+
+    # cooldown blocks even an armed, sustained trigger
+    ctl._shed_armed, ctl._shed_streak = True, 5
+    ctl._cooldown_left = 2
+    assert ctl.decide(hot) == []
+
+
+def test_foreign_rebalance_restarts_cooldown():
+    """A §12 recovery (or drift) REBALANCE in the stream must push the
+    controller's own rebalance trigger into cooldown."""
+    fleet = _flip_fleet()
+    ctl = ControlLoop(fleet, interval=4, cooldown=3)
+    ex = fleet.executor
+    assert ctl._cooldown_left == 0
+    ex.records.append(ExecRecord(instr=Rebalance(theta=0.5),
+                                 slot=fleet._slot, seq=next(ex._seq),
+                                 advances=0))
+    ctl.observe()
+    assert ctl._cooldown_left == 3
+
+
+# --------------------------------------------------------------------------
+# the decision log
+# --------------------------------------------------------------------------
+def test_decision_log_round_trip_and_errors():
+    ds = [Decision(seq=3, slot=2,
+                   action=Reweight(member="a", weight=0.25),
+                   reason="drift", observed={"shed_rate": 0.0}),
+          Decision(seq=9, slot=8, action=RebalanceTheta(theta=0.7),
+                   reason="shed")]
+    rt = decisions_from_json(decisions_to_json(ds))
+    assert rt == ds
+    with pytest.raises(ValueError, match="decision log version"):
+        decisions_from_json({"version": 99, "decisions": []})
+    with pytest.raises(ValueError, match="unknown decision kind"):
+        decisions_from_json({"version": 1, "decisions":
+                             [{"seq": 0, "slot": 0, "kind": "overclock",
+                               "action": {}}]})
+    # verify: seq must exist and must hold exactly the lowered action
+    recs = [ExecRecord(instr=lower_action(ds[0].action), slot=2, seq=3)]
+    verify_decisions(recs, ds[:1])
+    with pytest.raises(ValueError, match="no matching stream record"):
+        verify_decisions(recs, ds[1:])
+    bad = [ExecRecord(instr=SetParam(member="a", param="weight",
+                                     value=0.99), slot=2, seq=3)]
+    with pytest.raises(ValueError, match="lowered to"):
+        verify_decisions(bad, ds[:1])
+
+
+# --------------------------------------------------------------------------
+# replay: controlled runs replay bitwise with no controller attached
+# --------------------------------------------------------------------------
+def test_controlled_run_replays_bitwise():
+    trace_live = []
+    live = _flip_fleet(trace_live)
+    ctl = ControlLoop(live, interval=8, reweight_deadband=0.15)
+    reqs, arr = _flip_trace()
+    res_live = replay(live, reqs, arr)
+    assert any(isinstance(r.instr, SetParam) for r in live.stream)
+    verify_decisions(live.stream, ctl.decisions)
+
+    # serialize stream + decision log, replay on a fresh uncontrolled fleet
+    rt = stream_from_json(stream_to_json(live.stream, pool="pool0"))
+    log = decisions_from_json(decisions_to_json(ctl.decisions))
+    trace_rep = []
+    fresh = _flip_fleet(trace_rep)
+    assert fresh.controller is None
+    res_rep = fresh.executor.replay(rt, _flip_trace()[0], arr)
+
+    assert stream_signature(fresh.stream) == stream_signature(live.stream)
+    assert trace_rep == trace_live
+    assert res_rep.outputs == res_live.outputs
+    assert [c.ticket.rid for c in res_rep.completions] == \
+        [c.ticket.rid for c in res_live.completions]
+    # the decision log audits the replayed stream too (same seqs), and
+    # the replayed SET_PARAMs re-applied the reweight without a controller
+    verify_decisions(fresh.stream, log)
+    assert {m.name: m.weight for m in fresh.members} == \
+        pytest.approx({"a": 0.25, "b": 0.75})
+
+
+def test_v1_stream_replays_bitwise():
+    """Pre-§13 (schema v1) recorded streams stay loadable + replayable."""
+    trace_live = []
+    live = _flip_fleet(trace_live)          # no controller: v1-shaped run
+    reqs, arr = _flip_trace()
+    res_live = replay(live, reqs, arr)
+    doc = stream_to_json(live.stream)
+    doc["version"] = 1
+    rt = stream_from_json(doc)
+    trace_rep = []
+    fresh = _flip_fleet(trace_rep)
+    res_rep = fresh.executor.replay(rt, _flip_trace()[0], arr)
+    assert stream_signature(fresh.stream) == stream_signature(live.stream)
+    assert trace_rep == trace_live
+    assert res_rep.outputs == res_live.outputs
+
+
+def test_compile_refuses_controlled_fleet():
+    fleet = _flip_fleet()
+    ControlLoop(fleet, interval=8)
+    with pytest.raises(CompileError, match="ControlLoop"):
+        compile_fleet(fleet, _flip_trace()[0])
+
+
+def test_control_loop_validates_args():
+    with pytest.raises(ValueError, match="interval"):
+        ControlLoop(_flip_fleet(), interval=0)
+    with pytest.raises(ValueError, match="band"):
+        ControlLoop(_flip_fleet(), band=(1.0, 0.5))
+    with pytest.raises(ValueError, match="shed_low"):
+        ControlLoop(_flip_fleet(), shed_high=0.1, shed_low=0.2)

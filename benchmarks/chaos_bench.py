@@ -17,6 +17,12 @@ trace (arrival rate well above capacity, so the SLO matters) three ways:
     recovery event log re-executed on fresh pools with **no injector
     attached**: stream signatures, shed set, recovered rids and the
     event log must all match bitwise.
+  * ``process``  — a deterministic sim-member spike against real worker
+    *processes* (``python -m repro.fleet.worker``) over SocketTransport,
+    with one worker **SIGKILL'd** mid-drain (no injector — a real dead
+    process): exactly-once retirement, slot-domain goodput
+    (completions per router step) >= 0.9x the clean single-worker run,
+    and bitwise replay of the killed run on fresh in-process pools.
 
 Writes ``BENCH_chaos.json``; its ``goodput_fps`` leaves are gated
 higher-is-better in ``benchmarks/compare_bench.py``.
@@ -225,6 +231,138 @@ def bench_chaos(report: dict, image_size: int, requests: int,
           f"recovery events")
 
 
+def bench_process(report: dict, requests: int, reps: int) -> None:
+    """Real-process chaos (DESIGN.md §14): the same spike against worker
+    *processes* over SocketTransport, with one worker **SIGKILL'd**
+    mid-drain — no injector, a genuinely dead process detected by
+    connection loss.  Members are deterministic sim stubs with a modeled
+    per-slot compute cost, so outcomes and step counts are bitwise
+    reproducible.  Gated hard: exactly-once retirement, and chaos
+    goodput — measured in the *slot domain* (in-SLO completions per
+    router step, which is deterministic; wall-clock fps over ~100 ms
+    walls is scheduler noise) — >= 0.9x the clean single-worker run."""
+    from repro.fleet import MultiPoolRouter, stream_signature
+    from repro.fleet.net.coordinator import (connect, start_workers,
+                                             stop_workers)
+    from repro.fleet.net.worker import build_sim_fleet
+    from repro.serving import QueueFull, Request, poisson_arrivals
+
+    spec = "cnn:c:2,lm:p:3:opaque"
+    cost_us = 200                   # modeled compute per occupied slot
+    kill_step = max(2, requests // 5)   # mid-drain: victim holds work
+    arrivals = poisson_arrivals(requests, rate=RATE, seed=0)
+
+    def reqs():
+        return [Request(payload=i, model=("cnn" if i % 2 == 0 else "lm"))
+                for i in range(requests)]
+
+    def run(n_workers, kill_at=None):
+        procs = start_workers({
+            f"pool{i}": ["--sim", spec, "--sim-cost-us", str(cost_us)]
+            for i in range(n_workers)})
+        fleets = {}
+        try:
+            fleets = connect(procs, heartbeat_s=30.0)
+            router = MultiPoolRouter(fleets)
+            rs = reqs()
+            order = sorted(range(requests), key=lambda i: arrivals[i])
+            nxt, step, refused = 0, 0, []
+            t0 = time.perf_counter()
+            while nxt < len(order) or refused or router.has_work:
+                if kill_at is not None and step >= kill_at:
+                    procs[f"pool{n_workers - 1}"].kill()
+                    kill_at = None
+                due, refused = refused, []
+                while nxt < len(order) and arrivals[order[nxt]] <= step:
+                    due.append(order[nxt])
+                    nxt += 1
+                for i in due:
+                    try:
+                        router.submit(rs[i])
+                    except QueueFull:
+                        refused.append(i)
+                router.step()
+                step += 1
+            res = router.result()
+            wall = time.perf_counter() - t0
+        finally:
+            stop_workers(fleets, procs)
+        return wall, res, router, rs, step
+
+    print(f"\n## real-process chaos (sim members {spec!r}, {requests} "
+          f"requests, SIGKILL worker at router step {kill_step})")
+
+    best = {}
+    for name, leg in (("clean", lambda: run(1)),
+                      ("chaos", lambda: run(2, kill_at=kill_step))):
+        for _ in range(max(1, reps)):
+            gc.collect()
+            out = leg()
+            if name not in best or out[1].metrics.goodput_fps() > \
+                    best[name][1].metrics.goodput_fps():
+                best[name] = out
+
+    _w, res_chaos, router, rs, steps_chaos = best["chaos"]
+    steps_clean = best["clean"][4]
+    g_clean = best["clean"][1].metrics.goodput_fps()
+    g_chaos = res_chaos.metrics.goodput_fps()
+
+    # ---- invariants: exactly-once under a real SIGKILL ---------------
+    st = _statuses(res_chaos)
+    assert sorted(st) == list(range(requests)), \
+        "lost or duplicated request ids"
+    assert router.duplicates_dropped == 0, "a request retired twice"
+    assert list(router.dead) == ["pool1"], "the SIGKILL must land"
+    assert "failed" not in st.values(), \
+        "the survivor serves every model: recovery must re-route"
+    # slot-domain goodput: deterministic (same placements, same recovery
+    # path every run), so this gate cannot flake on machine load
+    gps_clean = best["clean"][1].metrics.completed / steps_clean
+    gps_chaos = res_chaos.metrics.completed / steps_chaos
+    ratio = gps_chaos / gps_clean if gps_clean else float("inf")
+    assert ratio >= 0.9, (
+        f"process-chaos goodput {gps_chaos:.3f}/step fell below 0.9x "
+        f"the clean single-worker run {gps_clean:.3f}/step")
+
+    # ---- the killed run replays bitwise on fresh in-process pools ----
+    streams = router.streams()
+    fresh = MultiPoolRouter({p: build_sim_fleet(spec) for p in streams})
+    fresh.replay(streams, list(router.placements), rs,
+                 list(router.events))
+    for pool, recs in streams.items():
+        assert stream_signature(recs) == stream_signature(
+            fresh.executors[pool].records), f"replay diverged on {pool}"
+    st_rep = {rid: fresh._metrics[rid].status for rid in range(requests)}
+    assert st_rep == st, "replayed recovered sets differ"
+
+    summ = res_chaos.metrics.summary()
+    report["process"] = {
+        "sim_cost_us": cost_us,
+        "kill_step": kill_step,
+        "clean": {"goodput_fps": round(g_clean, 2),
+                  "goodput_per_step": round(gps_clean, 4),
+                  "steps": steps_clean,
+                  "completed": best["clean"][1].metrics.completed},
+        "chaos": {"goodput_fps": round(g_chaos, 2),
+                  "goodput_per_step": round(gps_chaos, 4),
+                  "steps": steps_chaos,
+                  "completed": res_chaos.metrics.completed,
+                  "recovered": summ["recovered"],
+                  "dead": sorted(router.dead),
+                  "duplicates_dropped": router.duplicates_dropped},
+        "chaos_vs_clean_per_step": round(ratio, 3),
+        "replay_records": sum(len(r) for r in streams.values()),
+    }
+    print(f"{'leg':<28}{'good/step':>10}{'steps':>7}{'fps':>10}"
+          f"{'recov':>7}")
+    print(f"{'clean (1 worker)':<28}{gps_clean:>10.3f}{steps_clean:>7}"
+          f"{g_clean:>10.1f}{0:>7}")
+    print(f"{'chaos (2 workers, SIGKILL)':<28}{gps_chaos:>10.3f}"
+          f"{steps_chaos:>7}{g_chaos:>10.1f}{summ['recovered']:>7}")
+    print(f"process chaos vs clean: {ratio:.2f}x per-step; replay "
+          f"bitwise over {report['process']['replay_records']} records")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -248,6 +386,7 @@ def main(argv=None) -> int:
                     "image_size": image_size,
                     "requests": requests}
     bench_chaos(report, image_size, requests, args.reps)
+    bench_process(report, requests=200, reps=2)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
     print(f"wrote {args.out}")

@@ -1,0 +1,205 @@
+"""Transport benchmark: router throughput and wire latency across the
+fleet transports (DESIGN.md §14).
+
+Drives the same deterministic sim-member fleet (fixed-service-time stub
+engines — no conv compute, so transport overhead is the only variable)
+through the same forced-migration trace three ways:
+
+  * ``local``  — 2 in-process pools behind ``MultiPoolRouter``'s default
+                 :class:`LocalTransport` (in-memory mailbox)
+  * ``file``   — the same 2 pools with migration spooled through a
+                 :class:`FileTransport` directory (one framed envelope
+                 file per SEND)
+  * ``socket`` — 2 real worker processes (``python -m repro.fleet.worker
+                 --sim ...``) over :class:`SocketTransport`: every
+                 submit/step is a framed-envelope RPC and every migrated
+                 payload crosses a localhost TCP hop
+
+plus a per-hop wire-latency microbenchmark (ping/pong RTT percentiles on
+an idle worker's control channel).  Invariants checked hard: all three
+legs retire every request exactly once with *identical* statuses (a
+transport may change wall-clock, never outcomes), and the socket leg's
+collected streams + placement log replay bitwise on fresh in-process
+pools.
+
+Writes ``BENCH_transport.json``; its ``aggregate_fps`` leaves are gated
+higher-is-better in ``benchmarks/compare_bench.py``.
+
+    PYTHONPATH=src python -m benchmarks.transport_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+SPEC = "cnn:c:2,lm:p:3:opaque"
+POOLS = ("pool0", "pool1")
+
+
+def _reqs(n):
+    from repro.serving import Request
+
+    return [Request(payload=i, model=("cnn" if i % 2 == 0 else "lm"))
+            for i in range(n)]
+
+
+def _drive(router, reqs):
+    """Submit everything, force a migration two steps in, drain."""
+    for r in reqs:
+        router.submit(r)
+    for _ in range(2):
+        router.step()
+    moved = router.migrate("pool0", "pool1")
+    res = router.drain()
+    return moved, res
+
+
+def _statuses(router, n):
+    return {rid: router._metrics[rid].status for rid in range(n)}
+
+
+def bench_transport(report: dict, requests: int, reps: int,
+                    pings: int) -> None:
+    from repro.fleet import MultiPoolRouter, stream_signature
+    from repro.fleet.net import FileTransport
+    from repro.fleet.net.coordinator import (connect, start_workers,
+                                             stop_workers)
+    from repro.fleet.net.worker import build_sim_fleet
+
+    def leg_local(transport=None):
+        router = MultiPoolRouter(
+            {p: build_sim_fleet(SPEC) for p in POOLS}, transport=transport)
+        t0 = time.perf_counter()
+        moved, res = _drive(router, _reqs(requests))
+        return time.perf_counter() - t0, moved, res, router
+
+    def leg_file():
+        spool = tempfile.mkdtemp(prefix="repro_transport_bench_")
+        try:
+            return leg_local(FileTransport(spool))
+        finally:
+            shutil.rmtree(spool, ignore_errors=True)
+
+    def leg_socket():
+        procs = start_workers({p: ["--sim", SPEC] for p in POOLS})
+        fleets = {}
+        try:
+            fleets = connect(procs, heartbeat_s=30.0)
+            router = MultiPoolRouter(fleets)
+            t0 = time.perf_counter()
+            moved, res = _drive(router, _reqs(requests))
+            wall = time.perf_counter() - t0
+            rtts = []
+            handle = fleets["pool0"]._handle
+            for _ in range(pings):          # idle-channel RTT, per hop
+                p0 = time.perf_counter()
+                handle.ping()
+                rtts.append(time.perf_counter() - p0)
+        finally:
+            stop_workers(fleets, procs)
+        return wall, moved, res, router, sorted(rtts)
+
+    print(f"\n## fleet transports (sim members {SPEC!r}, {requests} "
+          f"requests, forced pool0->pool1 migration)")
+
+    legs = {"local": leg_local, "file": leg_file, "socket": leg_socket}
+    best: dict = {}
+    for name, leg in legs.items():
+        leg()                               # untimed warm-in
+        for _ in range(max(1, reps)):
+            gc.collect()
+            out = leg()
+            if name not in best or out[2].stats["aggregate_fps"] > \
+                    best[name][2].stats["aggregate_fps"]:
+                best[name] = out
+
+    # ---- invariants: identical outcomes on every transport -----------
+    ref = _statuses(best["local"][3], requests)
+    assert sorted(ref) == list(range(requests)), "lost or duplicated rids"
+    for name, out in best.items():
+        router = out[3]
+        assert len(out[2].completions) == requests, name
+        assert router.duplicates_dropped == 0, name
+        assert out[1] == best["local"][1] > 0, \
+            f"{name}: migration moved {out[1]} != {best['local'][1]}"
+        assert _statuses(router, requests) == ref, \
+            f"{name}: transport changed request outcomes"
+
+    # ---- the socket leg replays bitwise on fresh in-process pools ----
+    router = best["socket"][3]
+    streams = router.streams()
+    fresh = MultiPoolRouter({p: build_sim_fleet(SPEC) for p in POOLS})
+    fresh.replay(streams, list(router.placements), _reqs(requests),
+                 list(router.events))
+    for pool, recs in streams.items():
+        assert stream_signature(recs) == stream_signature(
+            fresh.executors[pool].records), f"replay diverged on {pool}"
+    n_records = sum(len(r) for r in streams.values())
+
+    rtts = best["socket"][4]
+    rtt_p50 = rtts[len(rtts) // 2] * 1e3
+    rtt_p95 = rtts[min(len(rtts) - 1, int(len(rtts) * 0.95))] * 1e3
+    for name, out in best.items():
+        wall, moved, res = out[0], out[1], out[2]
+        report[name] = {"aggregate_fps": round(res.stats["aggregate_fps"],
+                                               2),
+                        "drive_wall_ms": round(wall * 1e3, 2),
+                        "migrated": moved,
+                        "router_steps": res.stats["steps"]}
+    report["socket"]["rtt_p50_ms"] = round(rtt_p50, 4)
+    report["socket"]["rtt_p95_ms"] = round(rtt_p95, 4)
+    report["socket_vs_local"] = round(
+        report["socket"]["aggregate_fps"]
+        / report["local"]["aggregate_fps"], 4)
+    report["replay"] = {"bitwise": True, "records": n_records,
+                        "pools": len(streams)}
+
+    print(f"{'transport':<10}{'agg fps':>12}{'drive ms':>10}"
+          f"{'migrated':>9}")
+    for name in legs:
+        r = report[name]
+        print(f"{name:<10}{r['aggregate_fps']:>12.2f}"
+              f"{r['drive_wall_ms']:>10.2f}{r['migrated']:>9}")
+    print(f"wire RTT p50 {rtt_p50*1e3:.0f} us, p95 {rtt_p95*1e3:.0f} us "
+          f"over {len(rtts)} pings; socket replayed bitwise over "
+          f"{n_records} records")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape: fewer reps and pings (same request "
+                         "count — fps must stay comparable to the "
+                         "committed baseline)")
+    ap.add_argument("--out", default="BENCH_transport.json")
+    ap.add_argument("--requests", type=int, default=96,
+                    help="requests per leg (default 96)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timed reps per leg, best-of "
+                         "(default: 2 smoke / 4 full)")
+    ap.add_argument("--pings", type=int, default=None,
+                    help="RTT probes (default: 50 smoke / 200 full)")
+    args = ap.parse_args(argv)
+
+    requests = args.requests
+    reps = args.reps or (2 if args.smoke else 4)
+    pings = args.pings or (50 if args.smoke else 200)
+
+    report: dict = {"spec": SPEC, "requests": requests, "reps": reps,
+                    "platform": sys.platform,
+                    "cpus": os.cpu_count()}
+    bench_transport(report, requests, reps, pings)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

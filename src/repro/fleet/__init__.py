@@ -31,6 +31,13 @@ and injects SET_PARAM (member weight, LM fusion width) and REBALANCE
 instructions into the recorded stream, with a seq-watermarked decision
 log as the audit trail — controlled runs replay bitwise with no
 controller attached.
+
+Distributed transport (DESIGN.md §14): :mod:`repro.fleet.net` binds the
+router's SEND/RECV mailbox surface three ways — :class:`LocalTransport`
+(the in-memory default), :class:`FileTransport` (spool directory), and
+``SocketTransport`` behind real worker processes
+(``python -m repro.fleet.worker``) driven by the unchanged
+:class:`MultiPoolRouter` placement/migration/recovery logic.
 """
 from repro.fleet.compiler import (SlotCompiler, compile_fleet,
                                   stream_signature, validate_stream)
@@ -48,6 +55,7 @@ from repro.fleet.instructions import (COMPAT_VERSIONS, SCHEMA_VERSION,
                                       Rebalance, Recv, Run, Send, SetParam,
                                       dump_stream, load_stream,
                                       stream_from_json, stream_to_json)
+from repro.fleet.net import FileTransport, LocalTransport, SocketTransport
 from repro.fleet.planner import (FleetPlan, mix_schedule, normalize_mix,
                                  plan_fleet, plan_rows)
 from repro.fleet.pool import DevicePool, Lease
@@ -66,12 +74,14 @@ __all__ = [
     "Fault",
     "FaultInjector",
     "FaultPlan",
+    "FileTransport",
     "FleetEngine",
     "FleetPlan",
     "Free",
     "InjectedFault",
     "Instruction",
     "Lease",
+    "LocalTransport",
     "Member",
     "MemberView",
     "MultiPoolRouter",
@@ -93,6 +103,7 @@ __all__ = [
     "SetParam",
     "ShortestQueue",
     "SlotCompiler",
+    "SocketTransport",
     "WeightedFair",
     "build_cnn_fleet",
     "compile_fleet",

@@ -20,7 +20,8 @@ router owns only cross-pool concerns:
   * migration — :meth:`migrate` / :meth:`drain_pool` move queued
     (unadmitted) requests between pools as a SEND on the source and a
     RECV on the destination, with request identity re-mapped at the
-    router boundary (payloads ride the router's mailbox, never the
+    router boundary (payloads ride the transport's mailbox —
+    ``net.transport``: in-memory, spool files, or sockets — never the
     serialized stream);
   * dynamic theta re-leasing — when a pool's observed traffic mix
     drifts past ``rebalance_drift`` (total-variation distance from the
@@ -36,11 +37,11 @@ completion, whichever pool finally served it.
 from __future__ import annotations
 
 import time
-from collections import deque
 from typing import Mapping, Sequence
 
 from repro.fleet.faults import (FaultInjector, InjectedFault, PoolCrash,
                                 RecoveryConfig)
+from repro.fleet.net.transport import LocalTransport
 from repro.fleet.instructions import (ExecRecord, Free, Instruction, Recv,
                                       Rebalance, Run, Send, SetParam)
 from repro.serving.api import (Completion, EngineBase, QueueFull, Request,
@@ -70,8 +71,10 @@ class PoolExecutor:
                act on
     name       this pool's name in a multi-pool topology (SEND/RECV peers
                address each other by it)
-    transport  mailbox provider for SEND/RECV (a ``MultiPoolRouter``);
-               None = single-pool, migration instructions are an error
+    transport  mailbox binding for SEND/RECV (a ``net.transport`` class:
+               the router installs its own — LocalTransport by default,
+               SocketTransport inside a worker process); None =
+               single-pool, migration instructions are an error
     record     keep the executed stream in :attr:`records` (ExecRecord
                per instruction, with observed advances + wall-clock) —
                what serializes, replays, and exports to Chrome tracing
@@ -363,17 +366,23 @@ class MultiPoolRouter(EngineBase):
                  rebalance_every: int = 16,
                  plan_evals: int = 8,
                  injector: FaultInjector | None = None,
-                 recovery: RecoveryConfig | None = None):
+                 recovery: RecoveryConfig | None = None,
+                 transport=None):
         super().__init__(max_queue=None)
         if not fleets:
             raise ValueError("a MultiPoolRouter needs at least one pool")
         self.executors: dict[str, PoolExecutor] = {}
         self._seq = SeqCounter()
         self.recovery = recovery or RecoveryConfig()
+        # the SEND/RECV mailbox (net.transport); accounting stays here,
+        # on the on_send/on_drop/on_recv hooks, whatever carries payloads
+        self.transport = (transport if transport is not None
+                          else LocalTransport())
+        self.transport.bind(self)
         for name, fleet in fleets.items():
             ex = fleet.executor
             ex.name = name
-            ex.transport = self
+            ex.transport = self.transport
             ex._seq = self._seq         # router-wide order across pools
             ex.recovery = self.recovery
             if injector is not None:
@@ -389,8 +398,6 @@ class MultiPoolRouter(EngineBase):
         #    recipe for re-executing the run (:meth:`replay`)
         self._sources: dict[tuple[str, int], int] = {}
         #                    (pool, fleet rid) -> router rid
-        self._mail: dict[tuple[str, str], deque] = {}
-        #                  (src, dst) -> deque[(router rid, Request)]
         self._served: dict[str, dict[str, int]] = {
             name: {} for name in self.executors}
         self._steps = 0
@@ -426,7 +433,7 @@ class MultiPoolRouter(EngineBase):
     @property
     def in_transit(self) -> int:
         """Requests currently riding the SEND/RECV mailbox."""
-        return sum(len(box) for box in self._mail.values())
+        return self.transport.in_transit
 
     @property
     def has_work(self) -> bool:
@@ -480,7 +487,12 @@ class MultiPoolRouter(EngineBase):
             raise KeyError(f"no pool serves model {req.model!r} among "
                            f"live pools (pools serve: {served})")
         name = min(cands, key=self._outstanding)
-        return self._submit_to(name, req)
+        try:
+            return self._submit_to(name, req)
+        except PoolCrash as e:      # a remote pool can die at the submit
+            #                         boundary; recover and re-place
+            self._recovery_done.extend(self._fail_pool(name, str(e)))
+            return self.submit(req)
 
     def _submit_to(self, pool: str, req: Request) -> Ticket:
         """Submit into a specific pool, with router-level accounting and
@@ -611,6 +623,10 @@ class MultiPoolRouter(EngineBase):
                             priority=req.priority))
             except QueueFull:
                 continue
+            except PoolCrash as e:  # the candidate died mid-recovery:
+                #                     fail it too, keep trying the rest
+                self._recovery_done.extend(self._fail_pool(name, str(e)))
+                continue
             self._sources[(name, ticket.rid)] = rid
             self._metrics[rid].status = "recovered"
             self.events.append(("recover", wm, name, rid))
@@ -652,11 +668,7 @@ class MultiPoolRouter(EngineBase):
                 lost.append(self._sources.pop(key))
         # payloads in transit TO the dead pool (SENT, not yet RECVed)
         # would strand the mailbox forever — recover them too
-        for (s, d), box in self._mail.items():
-            if d == name:
-                while box:
-                    rid, _req = box.popleft()
-                    lost.append(rid)
+        lost.extend(self.transport.drain_for(name))
         for rid in sorted(lost):
             done.extend(self._reroute(rid, wm=wm))
         self._degrade_after_crash(name)
@@ -724,8 +736,7 @@ class MultiPoolRouter(EngineBase):
             #                         left the source — normal recovery
             self._recovery_done.extend(self._fail_pool(src, str(e)))
             return 0
-        box = self._mail.get((src, dst))
-        moved = len(box) if box else 0
+        moved = self.transport.pending(src, dst)
         try:
             self.executors[dst].inject(Recv(peer=src))
         except PoolCrash as e:      # crash at the RECV boundary: the
@@ -745,26 +756,24 @@ class MultiPoolRouter(EngineBase):
         dst = min(others, key=self._outstanding)
         return self.migrate(name, dst)
 
-    # transport surface used by PoolExecutor SEND/RECV ------------------
-    def send(self, src: str, dst: str, pairs) -> int:
-        """Deliver withdrawn requests into the (src, dst) mailbox; replay
-        re-drops recorded losses."""
+    # accounting hooks the transport calls at SEND/RECV boundaries ------
+    def on_send(self, src: str, dst: str,
+                pairs) -> list[tuple[int, Request]] | None:
+        """Account one SEND: translate member rids to router rids for
+        the transport to carry.  Returns None when replay re-drops a
+        recorded loss — the payloads must vanish here too, or the later
+        RECV delivers requests the live run never saw."""
         if self._seq.n in self._replay_drops:
-            # replaying a recorded run whose live SEND was dropped: the
-            # payloads must vanish here too, or the later RECV delivers
-            # requests the live run never saw
-            return self.drop_send(src, dst, pairs, seq=self._seq.n,
-                                  live=False)
+            self.on_drop(src, dst, pairs, seq=self._seq.n, live=False)
+            return None
         if dst not in self.executors:
             raise KeyError(f"SEND to unknown pool {dst!r} "
                            f"(pools: {self.pools})")
-        box = self._mail.setdefault((src, dst), deque())
-        for frid, req in pairs:
-            box.append((self._sources.pop((src, frid)), req))
-        return len(pairs)
+        return [(self._sources.pop((src, frid)), req)
+                for frid, req in pairs]
 
-    def drop_send(self, src: str, dst: str, pairs, *, seq: int,
-                  live: bool) -> int:
+    def on_drop(self, src: str, dst: str, pairs, *, seq: int,
+                live: bool) -> int:
         """A SEND lost in transit: un-account the withdrawn requests and
         (live) re-route each onto a placeable pool.  Logged as
         ``("drop", seq)`` so replay drops the same SEND, plus one
@@ -780,17 +789,10 @@ class MultiPoolRouter(EngineBase):
                 self._recovery_done.extend(self._reroute(rid, wm=seq + 1))
         return len(pairs)
 
-    def recv(self, dst: str, src: str, count: int | None, submit) -> int:
-        """Drain up to ``count`` mailbox payloads into ``submit`` on the
-        destination pool."""
-        box = self._mail.get((src, dst))
-        n = 0
-        while box and (count is None or n < count):
-            rid, req = box.popleft()
-            ticket = submit(req)
-            self._sources[(dst, ticket.rid)] = rid
-            n += 1
-        return n
+    def on_recv(self, dst: str, rid: int, frid: int) -> None:
+        """Account one delivered payload: router rid ``rid`` now lives on
+        pool ``dst`` under member rid ``frid``."""
+        self._sources[(dst, frid)] = rid
 
     # ------------------------------------------------------------------
     # dynamic theta re-leasing
@@ -841,6 +843,12 @@ class MultiPoolRouter(EngineBase):
         for m in ex.fleet.members:
             if m.name in mix:
                 m.weight = mix[m.name]
+                if getattr(ex, "remote", False):
+                    # a proxy member's weight is a mirror; the worker's
+                    # copy is what schedules — lower the reset through
+                    # the stream so replay re-applies it in position
+                    ex.inject(SetParam(member=m.name, param="weight",
+                                       value=float(mix[m.name])))
         self._served[pool] = {}
         self.rebalances.append((pool, theta))
         return theta
@@ -941,11 +949,8 @@ class MultiPoolRouter(EngineBase):
             self.dead[pool] = "replayed crash"
             self.events.append(("fail", wm, pool))
             lost = self._pop_sources(pool)
-            for (s, d), box in self._mail.items():
-                if d == pool:       # in-transit payloads died with it
-                    while box:
-                        rid, _req = box.popleft()
-                        lost.append(rid)
+            # in-transit payloads died with it
+            lost.extend(self.transport.drain_for(pool))
             for rid in sorted(lost):
                 if rid not in recovered_later:
                     self._fail_request(rid)

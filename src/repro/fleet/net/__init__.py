@@ -1,0 +1,35 @@
+"""Distributed fleet transport (DESIGN.md §14).
+
+The instruction stream (§11) plus the seq-watermarked placement log is a
+coordination protocol; this package gives it a wire.  ``wire`` frames
+versioned JSON envelopes; ``transport`` implements the SEND/RECV mailbox
+surface three ways (in-memory, spool files, sockets); ``coordinator``
+drives N worker processes through the unchanged ``MultiPoolRouter``
+placement/migration/recovery logic; ``worker`` is the per-pool process
+entrypoint (``python -m repro.fleet.worker``)."""
+from repro.fleet.net.transport import (FileTransport, LocalTransport,
+                                       SocketTransport)
+from repro.fleet.net.wire import (WIRE_VERSION, Channel, WireClosed,
+                                  WireError, decode_completion,
+                                  decode_request, encode_completion,
+                                  encode_request, read_env, write_env)
+
+__all__ = [
+    "WIRE_VERSION", "Channel", "WireClosed", "WireError",
+    "decode_completion", "decode_request", "encode_completion",
+    "encode_request", "read_env", "write_env",
+    "FileTransport", "LocalTransport", "SocketTransport",
+    "RemoteFleet", "WorkerHandle", "WorkerProc", "connect",
+    "start_workers", "stop_workers",
+]
+
+
+def __getattr__(name):
+    """Lazy coordinator exports: ``coordinator`` must import after
+    ``executor`` (it builds on the router), and ``executor`` imports this
+    package for :class:`LocalTransport` — laziness breaks the cycle."""
+    if name in ("RemoteFleet", "WorkerHandle", "WorkerProc", "connect",
+                "start_workers", "stop_workers"):
+        from repro.fleet.net import coordinator
+        return getattr(coordinator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,7 +16,9 @@ engines (which stay single-network and unchanged):
     see a :class:`MemberView` per member — queue depth, in-flight count,
     traffic weight, dispatch deficit, earliest pending deadline, and the
     predicted dominant core — and nothing else, so they compose with any
-    engine implementing the serving protocol.
+    engine implementing the serving protocol — including a §14
+    ``RemoteFleet``, whose view state is mirrored from the worker's
+    ``step_done``/``pong`` envelopes rather than read in-process.
 
 Policies:
 

@@ -1,0 +1,6 @@
+"""``python -m repro.fleet.worker`` — the distributed-fleet worker
+entrypoint (implementation: :mod:`repro.fleet.net.worker`)."""
+from repro.fleet.net.worker import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

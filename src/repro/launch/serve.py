@@ -205,11 +205,135 @@ def _parse_fleet_mix(args) -> dict[str, float]:
         _fail(str(e))
 
 
+def _serve_fleet_workers(args, mix, build, requests, arrivals) -> int:
+    """``fleet --workers N --transport socket``: each pool is a real
+    worker process (``python -m repro.fleet.worker``) hosting the same
+    CNN fleet; the coordinator drives them over ``SocketTransport``
+    through the standard ``MultiPoolRouter`` placement / migration /
+    crash-recovery logic (DESIGN.md §14)."""
+    from repro.fleet import MultiPoolRouter, RecoveryConfig
+    from repro.fleet.net.coordinator import (connect, start_workers,
+                                             stop_workers)
+    from repro.serving import QueueFull
+
+    kill = None
+    if args.kill_worker is not None:
+        pool_name, sep, at = args.kill_worker.partition("@")
+        if not sep or not at.isdigit():
+            _fail(f"--kill-worker wants POOL@STEP (e.g. pool1@3), got "
+                  f"{args.kill_worker!r}")
+        kill = (pool_name, int(at))
+    pools = [f"pool{p}" for p in range(args.workers)]
+    if kill is not None and kill[0] not in pools:
+        _fail(f"--kill-worker pool {kill[0]!r} is not one of {pools}")
+
+    wargs = ["--models", ",".join(mix),
+             "--image-size", str(args.image_size),
+             "--scheme", args.scheme, "--policy", args.policy,
+             "--burst", str(args.burst)]
+    if args.no_pallas:
+        wargs.append("--no-pallas")
+    co = 0 if args.no_interleave else args.co_dispatch
+    if co is not None:
+        wargs += ["--co-dispatch", str(co)]
+    if args.max_queue is not None:
+        wargs += ["--max-queue", str(args.max_queue)]
+
+    recovery = RecoveryConfig()
+    print(f"[serve] spawning {args.workers} worker process(es): "
+          f"python -m repro.fleet.worker --pool <name> {' '.join(wargs)}")
+    procs = start_workers({p: list(wargs) for p in pools})
+    fleets = {}
+    try:
+        fleets = connect(procs, heartbeat_s=recovery.heartbeat_s)
+        router = MultiPoolRouter(fleets, recovery=recovery)
+        addrs = ", ".join(f"{p}={procs[p].address}" for p in pools)
+        print(f"[serve] fleet {'+'.join(mix)} x {args.workers} workers "
+              f"over SocketTransport ({addrs})")
+        # replay()'s open loop, plus the mid-run SIGKILL hook
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        refused, nxt, step = [], 0, 0
+        while nxt < len(order) or refused or router.has_work:
+            if kill is not None and step >= kill[1]:
+                print(f"[serve] SIGKILL worker {kill[0]} at router "
+                      f"step {step}")
+                procs[kill[0]].kill()
+                kill = None
+            due, refused = refused, []
+            while nxt < len(order) and arrivals[order[nxt]] <= step:
+                due.append(order[nxt])
+                nxt += 1
+            for i in due:
+                try:
+                    router.submit(requests[i])
+                except QueueFull:
+                    refused.append(i)
+            router.step()
+            step += 1
+        res = router.result()
+        st = res.stats
+        streams = {name: list(ex.records)
+                   for name, ex in router.executors.items()}
+        placements = list(router.placements)
+        events = list(router.events)
+    finally:
+        stop_workers(fleets, procs)
+
+    n = len(requests)
+    print(f"[serve] streamed {n} request(s) over {args.workers} workers "
+          f"in {st['steps']} router steps: {st['wall_s']*1e3:.0f} ms, "
+          f"aggregate {st['aggregate_fps']:.2f} fps")
+    for pname, pp in st["pools"].items():
+        served = ", ".join(f"{m}:{c}" for m, c in pp["served"].items())
+        print(f"  {pname:<8} {pp['slots']} slots "
+              f"{pp['dispatches']} dispatches  served {served or '-'}")
+    for name, pm in st["per_model"].items():
+        print(f"  {name:<14} {pm['completed']} done  "
+              f"p50 {pm['p50_ms']:.1f} ms  p95 {pm['p95_ms']:.1f} ms  "
+              f"{pm['requests_per_s']:.2f} fps")
+    done = len(res.completions)
+    print(f"[serve] exactly-once: {done}/{n} retired, "
+          f"{st['duplicates_dropped']} duplicates dropped, "
+          f"{st['failed']} failed, {st['recovered']} recovered, "
+          f"dead workers {st['dead'] or '-'}")
+    if done != n or st["duplicates_dropped"] or st["failed"]:
+        print("repro.launch.serve: error: exactly-once retirement "
+              "violated", file=sys.stderr)
+        return 1
+    if args.verify_replay:
+        from repro.fleet.compiler import stream_signature
+
+        fresh = MultiPoolRouter({p: build()[0] for p in pools})
+        fresh.replay(streams, placements, requests, events)
+        for p, recs in streams.items():
+            if stream_signature(recs) != stream_signature(
+                    fresh.executors[p].records):
+                print(f"repro.launch.serve: error: replay diverged on "
+                      f"{p}", file=sys.stderr)
+                return 1
+        print(f"[serve] replay verified: "
+              f"{sum(len(r) for r in streams.values())} records across "
+              f"{len(streams)} pool(s) replay bitwise on fresh "
+              f"in-process fleets")
+    if args.trace:
+        import json
+
+        from repro.fleet.trace import chrome_trace
+
+        doc = chrome_trace(streams)
+        with open(args.trace, "w") as f:
+            json.dump(doc, f)
+        print(f"[serve] wrote {len(doc['traceEvents'])} trace events to "
+              f"{args.trace} (open in chrome://tracing)")
+    return 0
+
+
 def serve_fleet(args) -> int:
     """``fleet`` subcommand: multi-network serving over one device pool —
     or over ``--pools N`` process-local pools (hosts stand-in) behind a
     ``MultiPoolRouter``, each pool replaying its own compiled instruction
-    stream."""
+    stream — or over ``--workers N`` real worker processes behind
+    ``--transport socket`` (DESIGN.md §14)."""
     from repro.fleet import (FaultInjector, FaultPlan, MultiPoolRouter,
                              build_cnn_fleet, make_policy, mix_schedule,
                              plan_fleet, plan_rows)
@@ -218,6 +342,43 @@ def serve_fleet(args) -> int:
     mix = _parse_fleet_mix(args)
     if args.pools < 1:
         _fail(f"--pools must be >= 1, got {args.pools}")
+    if args.workers < 0:
+        _fail(f"--workers must be >= 0, got {args.workers}")
+    if args.workers:
+        if args.transport != "socket":
+            _fail(f"--workers {args.workers} puts each pool in its own "
+                  f"process; only --transport socket crosses process "
+                  f"boundaries ({args.transport!r} is an in-process "
+                  f"mailbox binding — use --pools for it)")
+        if args.pools != 1:
+            _fail("--workers and --pools are mutually exclusive: "
+                  "workers are real processes, pools are process-local")
+        if args.faults is not None:
+            _fail("--faults is in-process fault injection; with "
+                  "--workers, kill a real process instead "
+                  "(--kill-worker POOL@STEP)")
+        if args.adapt:
+            _fail("--adapt runs a per-pool in-process controller; it is "
+                  "not supported over --workers")
+        if args.slo_ms is not None:
+            _fail("--slo-ms attaches in-process shed policies; it is "
+                  "not supported over --workers")
+        if args.plan:
+            _fail("--plan is not supported over --workers (each worker "
+                  "builds its own fleet from the model list)")
+    elif args.transport == "socket":
+        _fail("--transport socket needs --workers N (worker processes "
+              "to talk to)")
+    elif args.transport == "file" and args.pools < 2:
+        _fail("--transport file is the multi-pool spool mailbox; it "
+              "needs --pools >= 2")
+    if args.spool is not None and args.transport != "file":
+        _fail("--spool only applies to --transport file")
+    if args.kill_worker is not None and not args.workers:
+        _fail("--kill-worker needs --workers")
+    if args.verify_replay and not args.workers:
+        _fail("--verify-replay needs --workers (the in-process paths "
+              "have replay tests of their own)")
     if args.slo_ms is not None and not args.slo_ms > 0:
         _fail(f"--slo-ms must be > 0, got {args.slo_ms}")
     if args.control_interval < 1:
@@ -255,6 +416,9 @@ def serve_fleet(args) -> int:
                                     args.image_size, 3)) for k in keys]
     requests = [Request(x, model=t) for x, t in zip(images, tags)]
     arrivals = _arrivals(n, args.arrival_rate)
+
+    if args.workers:
+        return _serve_fleet_workers(args, mix, build, requests, arrivals)
 
     def attach_controller(fleet_engine):
         if not args.adapt:
@@ -316,9 +480,20 @@ def serve_fleet(args) -> int:
         fleets = {f"pool{p}": build()[0] for p in range(args.pools)}
         controllers = {name: attach_controller(fl)
                        for name, fl in fleets.items()} if args.adapt else {}
+        transport = None
+        if args.transport == "file":
+            import tempfile
+
+            from repro.fleet.net import FileTransport
+
+            spool = args.spool or tempfile.mkdtemp(prefix="repro_spool_")
+            transport = FileTransport(spool)
+            print(f"[serve] inter-pool migration spooled through "
+                  f"{spool} (FileTransport)")
         router = MultiPoolRouter(
             fleets, injector=(FaultInjector(fault_plan)
-                              if fault_plan is not None else None))
+                              if fault_plan is not None else None),
+            transport=transport)
         for fleet_engine in fleets.values():
             for m in fleet_engine.members:
                 m.engine.runner.run_sequential(images[:1])
@@ -505,6 +680,31 @@ def main(argv=None):
                             "> 1 serves through a MultiPoolRouter that "
                             "places requests on the least outstanding "
                             "pool")
+    fleet.add_argument("--workers", type=int, default=0, metavar="N",
+                       help="serve over N real worker processes (python "
+                            "-m repro.fleet.worker), one pool each, "
+                            "behind --transport socket; mutually "
+                            "exclusive with --pools > 1")
+    fleet.add_argument("--transport", default="local",
+                       choices=("local", "socket", "file"),
+                       help="inter-pool request transport: 'local' "
+                            "(in-memory mailbox, the --pools default), "
+                            "'socket' (length-prefixed wire envelopes to "
+                            "--workers processes), 'file' (spool-"
+                            "directory mailbox between --pools, see "
+                            "--spool)")
+    fleet.add_argument("--spool", default=None, metavar="DIR",
+                       help="spool directory for --transport file "
+                            "(default: a fresh temp dir)")
+    fleet.add_argument("--kill-worker", default=None, metavar="POOL@STEP",
+                       help="SIGKILL the named worker process at the "
+                            "given router step (crash-recovery demo; "
+                            "needs --workers)")
+    fleet.add_argument("--verify-replay", action="store_true",
+                       help="after a --workers run, replay the collected "
+                            "per-worker streams + placement log on fresh "
+                            "in-process fleets and assert they match "
+                            "bitwise")
     fleet.add_argument("--trace", default=None, metavar="PATH",
                        help="write the executed instruction stream as "
                             "Chrome-tracing JSON to PATH (one track per "

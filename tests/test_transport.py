@@ -1,0 +1,361 @@
+"""Distributed fleet transport (DESIGN.md §14): wire envelope framing +
+drift rejection, the payload codec, the LocalTransport/FileTransport
+mailbox bindings, and real worker processes over SocketTransport —
+forced migration retires every request exactly once, a SIGKILL'd worker
+recovers through the §12 path, and the collected streams + placement log
+replay bitwise on fresh in-process fleets."""
+import io
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from repro.fleet import MultiPoolRouter, stream_signature  # noqa: E402
+from repro.fleet.net import (FileTransport, LocalTransport,  # noqa: E402
+                             wire)
+from repro.fleet.net.worker import (build_sim_fleet,  # noqa: E402
+                                    parse_sim_spec)
+from repro.serving import Request  # noqa: E402
+
+SPEC = "cnn:c:2,lm:p:3:opaque"
+_ENV = {**os.environ,
+        "PYTHONPATH": os.pathsep.join(
+            [os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "src"),
+             os.environ.get("PYTHONPATH", "")])}
+
+
+def _mixed_requests(n):
+    return [Request(payload=i, model=("cnn" if i % 2 == 0 else "lm"))
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# wire envelopes: framing round-trip + drift rejection
+# --------------------------------------------------------------------------
+def test_envelope_round_trip():
+    env = {"kind": "migrate_req", "src": "pool0", "dst": "pool1",
+           "count": 3}
+    doc = wire.unpack_env(wire.pack_env(env)[4:])
+    assert doc == {"v": wire.WIRE_VERSION, **env}
+
+
+def test_envelope_file_round_trip():
+    buf = io.BytesIO()
+    wire.write_env(buf, {"kind": "ping"})
+    wire.write_env(buf, {"kind": "migrate_ack", "n": 2})
+    buf.seek(0)
+    assert wire.read_env(buf)["kind"] == "ping"
+    assert wire.read_env(buf)["n"] == 2
+    with pytest.raises(wire.WireClosed):
+        wire.read_env(buf)          # clean EOF at the frame boundary
+
+
+def test_unknown_kind_rejected_both_ways():
+    with pytest.raises(wire.WireError, match="unknown envelope kind"):
+        wire.pack_env({"kind": "teleport"})
+    body = wire.pack_env({"kind": "ping"})[4:].replace(b"ping", b"warp")
+    with pytest.raises(wire.WireError, match="unknown envelope kind"):
+        wire.unpack_env(body)
+
+
+def test_unknown_field_is_drift():
+    good = wire.pack_env({"kind": "migrate_ack", "n": 1})[4:]
+    doc = good.replace(b'"n":1', b'"n":1,"hops":9')
+    with pytest.raises(wire.WireError, match="unknown fields"):
+        wire.unpack_env(doc)
+
+
+def test_version_mismatch_rejected():
+    body = wire.pack_env({"kind": "ping"})[4:]
+    drifted = body.replace(b'"v":%d' % wire.WIRE_VERSION, b'"v":99')
+    with pytest.raises(wire.WireError, match="wire version"):
+        wire.unpack_env(drifted)
+
+
+def test_truncated_frame_is_closed():
+    framed = wire.pack_env({"kind": "pong", "state": {"queued": 0}})
+    for cut in (2, len(framed) - 3):        # mid-prefix and mid-body
+        with pytest.raises(wire.WireClosed, match="truncated"):
+            wire.read_env(io.BytesIO(framed[:cut]))
+
+
+def test_undecodable_body_rejected():
+    with pytest.raises(wire.WireError, match="undecodable|not an object"):
+        wire.unpack_env(b"\xff\xfe nope")
+    with pytest.raises(wire.WireError, match="not an object"):
+        wire.unpack_env(b"[1,2]")
+
+
+# --------------------------------------------------------------------------
+# payload codec
+# --------------------------------------------------------------------------
+def test_codec_ndarray_round_trip():
+    a = np.arange(12, dtype=np.float32).reshape(3, 4) * 0.5
+    out = wire.decode_value(wire.encode_value({"x": a, "k": [1, "s"]}))
+    np.testing.assert_array_equal(out["x"], a)
+    assert out["x"].dtype == a.dtype and out["k"] == [1, "s"]
+
+
+def test_codec_bytes_and_scalars():
+    vals = [None, True, 3, 2.5, "hi", b"\x00\x01raw"]
+    assert wire.decode_value(wire.encode_value(vals)) == vals
+
+
+def test_codec_reserved_key_and_opaque_rejected():
+    with pytest.raises(wire.WireError, match="reserved key"):
+        wire.encode_value({"__nd__": [1]})
+    with pytest.raises(wire.WireError, match="not wire-serializable"):
+        wire.encode_value(object())
+
+
+def test_request_and_completion_round_trip():
+    req = Request(payload=np.ones((2, 2), np.int32), model="cnn",
+                  gen_steps=4, deadline=1.5, priority=2)
+    back = wire.decode_request(wire.encode_request(req))
+    np.testing.assert_array_equal(back.payload, req.payload)
+    assert (back.model, back.gen_steps, back.deadline, back.priority) == \
+        ("cnn", 4, 1.5, 2)
+    assert back.rid is req.rid is None      # rids never cross the wire
+
+
+# --------------------------------------------------------------------------
+# mailbox bindings: LocalTransport and FileTransport
+# --------------------------------------------------------------------------
+class _FakeRouter:
+    """Minimal accounting hooks: translate frid -> 1000 + frid."""
+
+    def __init__(self):
+        self.dropped, self.received = [], []
+
+    def on_send(self, src, dst, pairs):
+        return [(1000 + frid, req) for frid, req in pairs]
+
+    def on_drop(self, src, dst, pairs, *, seq, live):
+        self.dropped.append((seq, live, len(pairs)))
+        return len(pairs)
+
+    def on_recv(self, dst, rid, frid):
+        self.received.append((dst, rid, frid))
+
+
+@pytest.mark.parametrize("kind", ["local", "file"])
+def test_mailbox_binding_surface(kind, tmp_path):
+    t = (LocalTransport() if kind == "local"
+         else FileTransport(str(tmp_path / "spool")))
+    t.bind(_FakeRouter())
+    reqs = _mixed_requests(3)
+    t.send("a", "b", list(enumerate(reqs)))
+    assert t.in_transit == 3 and t.pending("a", "b") == 3
+    assert t.pending("b", "a") == 0
+    got = t.take("a", "b", 2)               # partial consume
+    assert [rid for rid, _ in got] == [1000, 1001]
+    assert t.pending("a", "b") == 1
+    assert [rid for rid, _ in t.take("a", "b", None)] == [1002]
+    assert t.in_transit == 0
+
+
+def test_file_transport_spools_wire_frames(tmp_path):
+    spool = str(tmp_path / "spool")
+    t = FileTransport(spool)
+    t.bind(_FakeRouter())
+    t.send("a", "b", list(enumerate(_mixed_requests(2))))
+    (name,) = os.listdir(spool)
+    assert name.endswith(".a.b.frame")
+    with open(os.path.join(spool, name), "rb") as f:
+        env = wire.read_env(f)              # the spool IS the wire format
+    assert env["kind"] == "frame" and len(env["items"]) == 2
+    t.take("a", "b", 1)                     # partial: head frame rewritten
+    assert len(os.listdir(spool)) == 1
+    t.take("a", "b", None)
+    assert os.listdir(spool) == []
+
+
+def test_file_transport_drop_and_drain(tmp_path):
+    t = FileTransport(str(tmp_path))
+    fr = _FakeRouter()
+    t.bind(fr)
+    t.drop_send("a", "b", [(0, _mixed_requests(1)[0])], seq=7, live=True)
+    assert fr.dropped == [(7, True, 1)] and t.in_transit == 0
+    t.send("a", "b", list(enumerate(_mixed_requests(2))))
+    t.send("c", "b", [(5, _mixed_requests(1)[0])])
+    assert sorted(t.drain_for("b")) == [1000, 1001, 1005]
+    assert t.in_transit == 0
+
+
+def _run_migrating_fleet(transport):
+    fleets = {"pool0": build_sim_fleet(SPEC), "pool1": build_sim_fleet(SPEC)}
+    router = MultiPoolRouter(fleets, transport=transport)
+    reqs = _mixed_requests(10)
+    for r in reqs:
+        router.submit(r)
+    for _ in range(2):
+        router.step()
+    moved = router.migrate("pool0", "pool1")
+    res = router.drain()
+    statuses = {rid: router._metrics[rid].status
+                for rid in range(len(reqs))}
+    sigs = {p: stream_signature(ex.records)
+            for p, ex in router.executors.items()}
+    return moved, res, statuses, sigs
+
+
+def test_file_transport_matches_local_bitwise(tmp_path):
+    m_loc, res_loc, st_loc, sig_loc = _run_migrating_fleet(None)
+    m_fil, res_fil, st_fil, sig_fil = _run_migrating_fleet(
+        FileTransport(str(tmp_path / "spool")))
+    assert m_fil == m_loc > 0
+    assert len(res_fil.completions) == len(res_loc.completions) == 10
+    assert st_fil == st_loc and sig_fil == sig_loc
+    assert os.listdir(str(tmp_path / "spool")) == []    # fully consumed
+
+
+# --------------------------------------------------------------------------
+# sim-spec parsing
+# --------------------------------------------------------------------------
+def test_parse_sim_spec():
+    assert parse_sim_spec(SPEC) == [("cnn", "c", 2, False),
+                                    ("lm", "p", 3, True)]
+    for bad in ("", "a:q:1", "a:c:0", "a:c:1:weird", "a:c"):
+        with pytest.raises(ValueError):
+            parse_sim_spec(bad)
+
+
+# --------------------------------------------------------------------------
+# real worker processes over SocketTransport
+# --------------------------------------------------------------------------
+def _spawn(n=2, **kw):
+    from repro.fleet.net.coordinator import connect, start_workers
+
+    procs = start_workers({f"pool{i}": ["--sim", SPEC] for i in range(n)},
+                          env=_ENV, **kw)
+    return procs, connect(procs, heartbeat_s=30.0)
+
+
+def _stop(fleets, procs):
+    from repro.fleet.net.coordinator import stop_workers
+
+    stop_workers(fleets, procs)
+
+
+def _assert_bitwise_replay(router, reqs, statuses):
+    streams = router.streams()
+    fresh = MultiPoolRouter({p: build_sim_fleet(SPEC) for p in streams})
+    fresh.replay(streams, list(router.placements), reqs,
+                 list(router.events))
+    for pool, recs in streams.items():
+        assert stream_signature(recs) == stream_signature(
+            fresh.executors[pool].records), pool
+    assert statuses == {rid: fresh._metrics[rid].status
+                        for rid in range(len(reqs))}
+
+
+def test_socket_fleet_migration_exactly_once_and_replays():
+    procs, fleets = _spawn()
+    try:
+        router = MultiPoolRouter(fleets)
+        reqs = _mixed_requests(10)
+        for r in reqs:
+            router.submit(r)
+        for _ in range(2):
+            router.step()
+        assert router.migrate("pool0", "pool1") > 0     # forced migration
+        res = router.drain()
+        assert len(res.completions) == len(reqs)        # every request...
+        assert len({c.ticket.rid for c in res.completions}) == len(reqs)
+        assert router.duplicates_dropped == 0           # ...exactly once
+        assert res.metrics.count("failed") == 0
+        statuses = {rid: router._metrics[rid].status
+                    for rid in range(len(reqs))}
+    finally:
+        _stop(fleets, procs)
+    _assert_bitwise_replay(router, reqs, statuses)
+
+
+def test_socket_fleet_sigkill_recovers_and_replays():
+    procs, fleets = _spawn()
+    try:
+        router = MultiPoolRouter(fleets)
+        reqs = _mixed_requests(12)
+        for r in reqs:
+            router.submit(r)
+        for _ in range(2):
+            router.step()
+        procs["pool1"].kill()                           # real SIGKILL
+        res = router.drain()
+        assert list(router.dead) == ["pool1"]
+        assert [e[0] for e in router.events].count("fail") == 1
+        assert len(res.completions) == len(reqs)
+        assert router.duplicates_dropped == 0
+        assert res.metrics.count("recovered") > 0
+        assert res.metrics.count("failed") == 0
+        statuses = {rid: router._metrics[rid].status
+                    for rid in range(len(reqs))}
+    finally:
+        _stop(fleets, procs)
+    _assert_bitwise_replay(router, reqs, statuses)
+
+
+def test_worker_rejects_wrong_pool_handshake():
+    from repro.fleet.net.coordinator import dial, start_workers
+
+    procs = start_workers({"pool0": ["--sim", SPEC]}, env=_ENV)
+    try:
+        chan = wire.Channel(dial(procs["pool0"].address, timeout_s=10.0),
+                            timeout_s=10.0)
+        chan.send({"kind": "hello", "pool": "poolX"})
+        reply = chan.recv()
+        assert reply["kind"] == "error"
+        assert "poolX" in reply["msg"]
+        chan.close()
+    finally:
+        for wp in procs.values():
+            wp.kill()
+
+
+# --------------------------------------------------------------------------
+# CLI usage errors (exit 2) and worker entrypoint validation
+# --------------------------------------------------------------------------
+def _serve(*extra):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "fleet",
+         "--models", "mbv1", "--requests", "1", *extra],
+        env=_ENV, capture_output=True, text=True, timeout=120)
+
+
+@pytest.mark.parametrize("flags", [
+    ("--workers", "2", "--transport", "local"),
+    ("--workers", "2", "--transport", "file"),
+    ("--transport", "socket"),
+    ("--transport", "file"),                # needs --pools >= 2
+    ("--workers", "2", "--transport", "socket", "--pools", "2"),
+    ("--workers", "2", "--transport", "socket", "--adapt"),
+    ("--workers", "2", "--transport", "socket", "--slo-ms", "5"),
+    ("--spool", "/tmp/x"),                  # only with --transport file
+    ("--kill-worker", "pool0@1"),           # needs --workers
+    ("--verify-replay",),                   # needs --workers
+    ("--workers", "2", "--transport", "socket",
+     "--kill-worker", "nope"),              # wants POOL@STEP
+])
+def test_serve_fleet_bad_combos_exit_2(flags):
+    r = _serve(*flags)
+    assert r.returncode == 2, r.stderr
+    assert "error:" in r.stderr
+
+
+def _worker(*argv):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.fleet.worker", *argv],
+        env=_ENV, capture_output=True, text=True, timeout=120)
+
+
+def test_worker_cli_usage_errors_exit_2():
+    assert _worker("--pool", "p0", "--sim", "a:q:1").returncode == 2
+    assert _worker("--pool", "p0", "--models", "mbv1",
+                   "--shed").returncode == 2      # --shed is sim-only
+    assert _worker("--pool", "p0", "--models", "warpnet9").returncode == 2

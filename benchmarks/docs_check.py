@@ -1,8 +1,8 @@
 """Docs drift check: every command the docs show must still answer.
 
 Extracts each ``python -m <module>`` invocation from README.md and
-docs/operations.md (fenced blocks, inline code, prose — any mention
-must resolve) and runs the module with
+docs/operations.md / docs/observability.md (fenced blocks, inline
+code, prose — any mention must resolve) and runs the module with
 ``--help`` (PYTHONPATH=src, repo root as cwd), expecting exit 0 — so a
 renamed module, a deleted bench, or a broken argparse surface fails CI
 instead of rotting silently in the docs.  Only module *resolution and
@@ -19,7 +19,8 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ("README.md", os.path.join("docs", "operations.md"))
+DOCS = ("README.md", os.path.join("docs", "operations.md"),
+        os.path.join("docs", "observability.md"))
 
 _INVOKE = re.compile(r"python\s+-m\s+([A-Za-z_][\w.]*)")
 

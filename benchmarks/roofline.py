@@ -18,8 +18,17 @@ def load(results_dir: str = "results/dryrun", mesh: str = "single"):
     from repro.launch.dryrun import microbatches_for
     from repro.launch.roofline_model import hbm_bytes_per_device
     rows = []
-    for f in sorted(glob.glob(os.path.join(results_dir,
-                                           f"*.{mesh}.json"))):
+    if not os.path.isdir(results_dir):
+        print(f"[roofline] results dir {results_dir!r} does not exist; "
+              f"nothing to report (run the dryrun sweep first)")
+        return rows
+    paths = sorted(glob.glob(os.path.join(results_dir,
+                                          f"*.{mesh}.json")))
+    if not paths:
+        print(f"[roofline] no *.{mesh}.json results under "
+              f"{results_dir!r}; nothing to report")
+        return rows
+    for f in paths:
         d = json.load(open(f))
         if not d.get("ok"):
             rows.append(d)
@@ -101,3 +110,29 @@ def report(results_dir: str = "results/dryrun", mesh: str = "single",
     print(text)
     print(f"\n{ok}/{len(rows)} cells ok")
     return text
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.roofline",
+        description="Render the per-(arch x shape x mesh) roofline "
+                    "table from dryrun result JSONs.")
+    ap.add_argument("--results-dir", default="results/dryrun",
+                    help="directory of dryrun *.MESH.json results "
+                         "(default: results/dryrun)")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi"),
+                    help="mesh flavor to report (default: single)")
+    ap.add_argument("--out", default=None,
+                    help="also write the markdown table to this path")
+    args = ap.parse_args(argv)
+    report(args.results_dir, args.mesh, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

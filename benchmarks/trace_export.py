@@ -56,10 +56,13 @@ def main(argv=None) -> int:
         ap.error("no wall-clock-stamped records in the input streams "
                  "(compiled-only streams carry no timings; export an "
                  "*executed* stream)")
-    n = write_chrome_trace(streams, args.out)
+    n, skipped = write_chrome_trace(streams, args.out)
     print(f"[trace_export] {len(streams)} pool(s), {n_stamped} stamped "
           f"records -> {n} events in {args.out} "
           f"(open in chrome://tracing)")
+    if skipped:
+        print(f"[trace_export] skipped {skipped} compiled-only "
+              f"record(s) with no wall-clock stamps")
     return 0
 
 

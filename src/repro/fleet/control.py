@@ -458,6 +458,12 @@ class ControlLoop:
         at the injected instruction's seq watermark."""
         wm = self.fleet.executor._seq.n
         self.fleet.executor.inject(lower_action(action))
+        # wall domain: replay has no controller — it re-executes the
+        # *lowered* instructions, which the executor counts in slot domain
+        self.fleet.executor.obs.counter(
+            "control_decisions_total", "controller actions applied, by kind",
+            "wall").inc(labels={"kind": action.kind,
+                                "pool": self.fleet.executor.name})
         self.decisions.append(Decision(
             seq=wm, slot=self.fleet._slot, action=action, reason=reason,
             observed={"shed_rate": round(obs.shed_rate, 4),

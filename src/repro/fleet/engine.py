@@ -74,7 +74,8 @@ from repro.fleet.pool import DevicePool
 from repro.fleet.router import (MemberView, RoundRobin, Router,
                                 SchedulingPolicy)
 from repro.serving.api import (AdmissionPolicy, Completion, EngineBase,
-                               Metrics, Request, RequestMetrics, Ticket)
+                               Metrics, QueueFull, Request, RequestMetrics,
+                               Ticket)
 
 
 @dataclasses.dataclass
@@ -176,10 +177,27 @@ class FleetEngine(EngineBase):
         name = self.router.route(req)
         member = self._by_name[name]
         submitted_at = time.perf_counter()
-        mticket = member.engine.submit(
-            Request(payload=req.payload, gen_steps=req.gen_steps,
-                    model=name, deadline=req.deadline,
-                    priority=req.priority))
+        obs = self.executor.obs
+        try:
+            mticket = member.engine.submit(
+                Request(payload=req.payload, gen_steps=req.gen_steps,
+                        model=name, deadline=req.deadline,
+                        priority=req.priority))
+        except QueueFull:
+            # refusals depend on the caller's retry cadence, not the
+            # stream — wall domain (successful admissions are slot:
+            # replay re-submits them at their placement watermarks)
+            obs.counter("serve_queue_full_total",
+                        "submissions refused by a full member queue",
+                        "wall").inc(labels={"pool": self.executor.name,
+                                            "model": name})
+            raise
+        obs.counter("serve_requests_total",
+                    "requests admitted into member queues", "slot").inc(
+            labels={"pool": self.executor.name, "model": name})
+        obs.gauge("serve_queue_depth", "queued requests across members",
+                  "slot").set(self.queued,
+                              labels={"pool": self.executor.name})
         rid = self._next_rid
         self._next_rid += 1
         req.rid = rid                    # the engine contract: rid is

@@ -44,6 +44,7 @@ from repro.fleet.faults import (FaultInjector, InjectedFault, PoolCrash,
 from repro.fleet.net.transport import LocalTransport
 from repro.fleet.instructions import (ExecRecord, Free, Instruction, Recv,
                                       Rebalance, Run, Send, SetParam)
+from repro.obs import DEFAULT_COUNT_BOUNDS, Registry
 from repro.serving.api import (Completion, EngineBase, QueueFull, Request,
                                RequestMetrics, Ticket)
 
@@ -101,6 +102,8 @@ class PoolExecutor:
         self.timeouts = 0    # RUNs whose wall time exceeded run_timeout_s
         self._seq = SeqCounter()          # router replaces with a shared
         #                                   counter in multi-pool runs
+        self.obs = Registry()             # ...and with a shared registry:
+        #                                   one telemetry namespace per run
         self._held: dict[str, list] = {}  # member -> flights whose FREE
         #                                   has not executed yet
 
@@ -140,13 +143,16 @@ class PoolExecutor:
         fleet = self.fleet
         done: list[Completion] = []
         advances = 0
+        shed_n = 0
         if isinstance(instr, Run):
             m = fleet._by_name[instr.member]
             # SLO shedding happens at the dispatch boundary, clocked by
             # the fleet slot — the deterministic domain replay re-derives
             shed = getattr(m.engine, "shed_expired", None)
             if shed is not None:
-                done.extend(fleet._adopt(m, c) for c in shed(slot))
+                expired = list(shed(slot))
+                shed_n = len(expired)
+                done.extend(fleet._adopt(m, c) for c in expired)
             if instr.fused:
                 # opaque member: step() fuses dispatch and block
                 for _ in range(instr.slots):
@@ -209,11 +215,80 @@ class PoolExecutor:
             # finished — a timeout is a strike, and the router degrades
             # the pool at timeout_strikes (drain + stop placing)
             self.timeouts += 1
+            self.obs.counter("fleet_run_timeouts_total",
+                             "RUNs past run_timeout_s (strikes)",
+                             "wall").inc(labels={"pool": self.name})
+        self._observe(instr, slot, advances, shed_n, retries, t1 - t0)
         if self._record:
             self.records.append(ExecRecord(
                 instr=instr, slot=slot, seq=next(self._seq),
                 advances=advances, t0=t0, t1=t1, retries=retries))
         return done
+
+    def _observe(self, instr: Instruction, slot: int, advances: int,
+                 shed_n: int, retries: int, dt: float) -> None:
+        """Instrument one *completed* instruction.  Runs after every
+        state mutation and never before a possible :class:`PoolCrash`
+        escape, so slot-domain counters fire exactly once per recorded
+        instruction — live and under :meth:`replay` alike — from values
+        the stream signature pins (op, core, advances, slot).  Wall-clock
+        values (duration, injector retries) land in the ``wall`` domain."""
+        obs = self.obs
+        if not obs.enabled:
+            return
+        pool = {"pool": self.name}
+        obs.counter("fleet_instructions_total",
+                    "instructions executed, by op", "slot").inc(
+            labels={"pool": self.name, "op": instr.op})
+        obs.gauge("fleet_slot", "latest executed fleet slot",
+                  "slot").set(slot, labels=pool)
+        if isinstance(instr, Run):
+            member = {"pool": self.name, "member": instr.member}
+            obs.counter("fleet_advances_total",
+                        "flight advances dispatched by RUNs",
+                        "slot").inc(advances, labels=member)
+            core = "fused" if instr.fused else (instr.core or "mixed")
+            obs.counter("fleet_submesh_busy_slots_total",
+                        "RUN advances by dominant submesh", "slot").inc(
+                advances, labels={"pool": self.name, "core": core})
+            obs.histogram("fleet_run_advances",
+                          "advances per RUN instruction", "slot",
+                          bounds=DEFAULT_COUNT_BOUNDS).observe(
+                advances, labels=pool)
+            obs.gauge("fleet_in_flight", "member flights in the pipeline",
+                      "slot").set(
+                self.fleet._by_name[instr.member].engine.in_flight,
+                labels=member)
+            obs.counter("fleet_shed_total",
+                        "completions shed at the dispatch boundary",
+                        "slot").inc(shed_n, labels=member)
+        elif isinstance(instr, Free):
+            obs.gauge("fleet_in_flight", "member flights in the pipeline",
+                      "slot").set(
+                self.fleet._by_name[instr.member].engine.in_flight,
+                labels={"pool": self.name, "member": instr.member})
+        elif isinstance(instr, Send):
+            obs.counter("fleet_sent_total",
+                        "requests withdrawn onto the mailbox by SENDs",
+                        "slot").inc(advances, labels={
+                            "pool": self.name, "peer": instr.peer})
+        elif isinstance(instr, Recv):
+            obs.counter("fleet_recv_total",
+                        "requests delivered from the mailbox by RECVs",
+                        "slot").inc(advances, labels={
+                            "pool": self.name, "peer": instr.peer})
+        elif isinstance(instr, SetParam):
+            obs.counter("fleet_set_params_total",
+                        "SET_PARAM instructions, by param", "slot").inc(
+                labels={"pool": self.name, "param": instr.param})
+        if retries:
+            obs.counter("fleet_run_retries_total",
+                        "RUN attempts re-issued after injected faults",
+                        "wall").inc(retries, labels=pool)
+        obs.histogram("fleet_instr_seconds",
+                      "wall-clock window per executed instruction",
+                      "wall").observe(dt, labels={"pool": self.name,
+                                                  "op": instr.op})
 
     def execute_slot(self, instrs: Sequence[Instruction],
                      slot: int) -> list[Completion]:
@@ -373,17 +448,20 @@ class MultiPoolRouter(EngineBase):
             raise ValueError("a MultiPoolRouter needs at least one pool")
         self.executors: dict[str, PoolExecutor] = {}
         self._seq = SeqCounter()
+        self.obs = Registry()
         self.recovery = recovery or RecoveryConfig()
         # the SEND/RECV mailbox (net.transport); accounting stays here,
         # on the on_send/on_drop/on_recv hooks, whatever carries payloads
         self.transport = (transport if transport is not None
                           else LocalTransport())
         self.transport.bind(self)
+        self.transport.obs = self.obs
         for name, fleet in fleets.items():
             ex = fleet.executor
             ex.name = name
             ex.transport = self.transport
             ex._seq = self._seq         # router-wide order across pools
+            ex.obs = self.obs           # ...and one telemetry namespace
             ex.recovery = self.recovery
             if injector is not None:
                 ex.injector = injector
@@ -512,6 +590,9 @@ class MultiPoolRouter(EngineBase):
         self._order.append(rid)
         self._sources[(pool, ticket.rid)] = rid
         self.placements.append((self._seq.n, pool))
+        self.obs.counter("router_placements_total",
+                         "requests placed, by pool", "slot").inc(
+            labels={"pool": pool})
         self._journal[rid] = Request(payload=req.payload,
                                      gen_steps=req.gen_steps,
                                      model=req.model,
@@ -542,6 +623,16 @@ class MultiPoolRouter(EngineBase):
                                       for c in pool_done)
                         if c2 is not None)
         self._steps += 1
+        if self.obs.enabled:
+            # live loop shape (replay never calls step): wall domain
+            self.obs.counter("router_steps_total", "router step calls",
+                             "wall").inc()
+            self.obs.gauge("router_queue_depth",
+                           "queued requests across live pools + mailbox",
+                           "wall").set(self.queued)
+            self.obs.gauge("router_in_transit",
+                           "requests riding the SEND/RECV mailbox",
+                           "wall").set(self.in_transit)
         self._check_degradation()
         if (self.rebalance_drift is not None
                 and self._steps % self.rebalance_every == 0):
@@ -563,6 +654,9 @@ class MultiPoolRouter(EngineBase):
         rid = self._sources.pop(key)
         if rid in self._completions:
             self.duplicates_dropped += 1
+            self.obs.counter("router_duplicates_dropped_total",
+                             "duplicate retirements dropped "
+                             "(at-most-once)", "wall").inc()
             return None
         m = self._metrics[rid]
         m.started_at = c.metrics.started_at
@@ -581,11 +675,26 @@ class MultiPoolRouter(EngineBase):
         model = c.metrics.model or "?"
         served = self._served[pool]
         served[model] = served.get(model, 0) + 1
+        self.obs.counter("router_retired_total",
+                         "completions retired at the router, by "
+                         "pool/model/status", "slot").inc(
+            labels={"pool": pool, "model": model, "status": m.status})
         return fc
 
     # ------------------------------------------------------------------
     # crash recovery (DESIGN.md §12)
     # ------------------------------------------------------------------
+    def _log_event(self, ev: tuple) -> None:
+        """Append one recovery event and count it.  Every event-log
+        write — live (`_fail_pool`, `_reroute`, `on_drop`) and replayed
+        (`_apply_event` re-appends at the same watermark) — funnels
+        through here, so ``router_recovery_events_total`` is a pure
+        function of the event log and replays dict-equal."""
+        self.events.append(ev)
+        self.obs.counter("router_recovery_events_total",
+                         "recovery events logged, by kind", "slot").inc(
+            labels={"kind": ev[0]})
+
     def _pop_sources(self, pool: str) -> list[int]:
         """Withdraw and return the router rids of every request the
         placement log still maps onto ``pool``."""
@@ -594,6 +703,9 @@ class MultiPoolRouter(EngineBase):
 
     def _fail_request(self, rid: int) -> Completion:
         """Retire ``rid`` as failed: no surviving pool can serve it."""
+        self.obs.counter("router_failed_total",
+                         "requests no surviving pool could serve",
+                         "slot").inc()
         m = self._metrics[rid]
         m.status = "failed"
         m.finished_at = time.perf_counter()
@@ -629,7 +741,7 @@ class MultiPoolRouter(EngineBase):
                 continue
             self._sources[(name, ticket.rid)] = rid
             self._metrics[rid].status = "recovered"
-            self.events.append(("recover", wm, name, rid))
+            self._log_event(("recover", wm, name, rid))
             return []
         self._retry.append(rid)     # every candidate full: try again at
         return []                   # the next step boundary
@@ -650,7 +762,7 @@ class MultiPoolRouter(EngineBase):
         seq watermark so replay re-derives the same decisions."""
         self.dead[name] = reason
         wm = self._seq.n
-        self.events.append(("fail", wm, name))
+        self._log_event(("fail", wm, name))
         done: list[Completion] = []
         ex = self.executors[name]
         lost: list[int] = []
@@ -737,6 +849,10 @@ class MultiPoolRouter(EngineBase):
             self._recovery_done.extend(self._fail_pool(src, str(e)))
             return 0
         moved = self.transport.pending(src, dst)
+        self.obs.counter("router_migrations_total",
+                         "requests moved by migrate()/drain_pool()",
+                         "wall").inc(moved, labels={"src": src,
+                                                    "dst": dst})
         try:
             self.executors[dst].inject(Recv(peer=src))
         except PoolCrash as e:      # crash at the RECV boundary: the
@@ -782,7 +898,7 @@ class MultiPoolRouter(EngineBase):
         payloads, so replay must apply it after the SEND record too.
         Returns ``len(pairs)`` either way: the record's ``advances``
         match a delivered SEND bitwise."""
-        self.events.append(("drop", seq))
+        self._log_event(("drop", seq))
         for frid, _req in pairs:
             rid = self._sources.pop((src, frid))
             if live:
@@ -947,7 +1063,7 @@ class MultiPoolRouter(EngineBase):
         if kind == "fail":
             _kind, wm, pool = event
             self.dead[pool] = "replayed crash"
-            self.events.append(("fail", wm, pool))
+            self._log_event(("fail", wm, pool))
             lost = self._pop_sources(pool)
             # in-transit payloads died with it
             lost.extend(self.transport.drain_for(pool))
@@ -963,7 +1079,7 @@ class MultiPoolRouter(EngineBase):
                         priority=req.priority))
             self._sources[(pool, ticket.rid)] = rid
             self._metrics[rid].status = "recovered"
-            self.events.append(("recover", wm, pool, rid))
+            self._log_event(("recover", wm, pool, rid))
         elif kind == "drop":
             pass    # consumed via _replay_drops inside send(); the
             #         replayed drop_send re-logs it at the same position

@@ -146,6 +146,9 @@ class WorkerHandle:
         timeout (and on every call after one)."""
         if self.lost is not None:
             raise PoolCrash(f"worker {self.pool!r} is gone: {self.lost}")
+        obs = self._obs
+        if self.chan.obs is None and obs is not None:
+            self.chan.obs = obs      # coordinator-side net_* counters
         try:
             self.chan.send(env)
             while True:
@@ -157,6 +160,12 @@ class WorkerHandle:
         except (wire.WireError, OSError) as e:
             self.lost = str(e) or type(e).__name__
             self.chan.close()
+            if obs is not None:
+                # wall domain: a silent or vanished worker is a fact
+                # about the transport, never the stream
+                obs.counter("net_heartbeat_misses_total",
+                            "RPCs lost to worker silence/disconnect",
+                            "wall").inc(labels={"pool": self.pool})
             raise PoolCrash(f"worker {self.pool!r} connection lost "
                             f"({self.lost})") from e
 
@@ -190,13 +199,43 @@ class WorkerHandle:
                 c = wire.decode_completion(doc)
                 ex.fleet._completions[c.ticket.rid] = c
 
+    @property
+    def _obs(self):
+        """The adopting router's registry (None before adoption)."""
+        return getattr(self.ex, "obs", None)
+
     def ping(self) -> dict:
         """Heartbeat probe; returns the worker's state snapshot."""
+        t0 = time.perf_counter()
         reply = self.rpc({"kind": "ping"})
         if reply["kind"] != "pong":
             raise wire.WireError(f"expected pong, got {reply['kind']!r}")
+        obs = self._obs
+        if obs is not None:
+            obs.histogram("net_rtt_seconds",
+                          "ping round-trip time, per worker").observe(
+                time.perf_counter() - t0, labels={"pool": self.pool})
         self.state = reply["state"]
         return reply["state"]
+
+    def collect(self, ex) -> dict | None:
+        """Pull the worker's cumulative telemetry snapshot and absorb it
+        into ``ex.obs`` under this pool's name.  Best-effort: a worker
+        that died since the last collect just keeps its previous
+        snapshot (at most one unshipped window is lost)."""
+        obs = self._obs
+        if obs is None or not obs.enabled:
+            return None
+        try:
+            reply = self.rpc({"kind": "telemetry"})
+        except PoolCrash:
+            return None
+        if reply["kind"] != "telemetry_snap":
+            raise wire.WireError(f"expected telemetry_snap, got "
+                                 f"{reply['kind']!r}")
+        snap = reply["snapshot"]
+        obs.absorb(snap, source=self.pool)
+        return snap
 
     def shutdown(self) -> None:
         """Ask the worker to exit cleanly; best-effort."""

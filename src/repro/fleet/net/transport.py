@@ -43,6 +43,8 @@ class LocalTransport:
     """In-memory (src, dst) -> deque mailbox; the default binding for
     process-local multi-pool serving."""
 
+    obs = None     # optional repro.obs.Registry (the router sets it)
+
     def __init__(self):
         self.router = None
         self._mail: dict[tuple[str, str], deque] = {}
@@ -117,6 +119,8 @@ class FileTransport:
     point: a spool directory is a replayable, debuggable trace of every
     payload that crossed pools."""
 
+    obs = None     # optional repro.obs.Registry (the router sets it)
+
     def __init__(self, spool_dir: str):
         os.makedirs(spool_dir, exist_ok=True)
         self.spool_dir = spool_dir
@@ -144,8 +148,17 @@ class FileTransport:
             return wire.read_env(f)
 
     def _write(self, name: str, env: dict) -> None:
+        buf = wire.pack_env(env)
         with open(os.path.join(self.spool_dir, name), "wb") as f:
-            wire.write_env(f, env)
+            f.write(buf)
+            f.flush()
+        if self.obs is not None and self.obs.enabled:
+            # wall domain: spool traffic depends on drop timing
+            self.obs.counter("net_envelopes_total",
+                             "envelopes on the wire", "wall").inc(
+                labels={"dir": "out", "kind": str(env.get("kind"))})
+            self.obs.counter("net_bytes_total", "framed bytes sent",
+                             "wall").inc(len(buf), labels={"dir": "out"})
 
     # executor-facing ---------------------------------------------------
     def send(self, src: str, dst: str, pairs) -> int:

@@ -32,9 +32,14 @@ import numpy as np
 
 from repro.serving.api import Completion, Request, RequestMetrics, Ticket
 
-#: wire schema version; a peer speaking any other version is rejected at
-#: the first envelope, not discovered mid-run
-WIRE_VERSION = 1
+#: wire schema version; envelopes are stamped with it.  v2 added the
+#: telemetry pull (``telemetry``/``telemetry_snap``); everything a v1
+#: peer could say is unchanged, so both versions stay readable
+WIRE_VERSION = 2
+#: versions this reader accepts
+WIRE_COMPAT = (1, 2)
+#: kinds that did not exist in v1 — a v1 envelope carrying one is drift
+_V2_KINDS = ("telemetry", "telemetry_snap")
 
 _LEN = struct.Struct(">I")
 _MAX_FRAME = 1 << 30    # 1 GiB: a corrupt length prefix fails loudly
@@ -72,6 +77,8 @@ ENVELOPE_FIELDS: dict[str, frozenset] = {
     "migrate_map_ack": frozenset({"n"}),
     "ping": frozenset(),
     "pong": frozenset({"state"}),
+    "telemetry": frozenset(),
+    "telemetry_snap": frozenset({"snapshot"}),
     "shutdown": frozenset(),
     "bye": frozenset(),
     "error": frozenset({"etype", "msg", "records", "completions",
@@ -93,10 +100,13 @@ def pack_env(env: dict) -> bytes:
 
 def _validate(doc: dict) -> dict:
     v = doc.get("v")
-    if v != WIRE_VERSION:
-        raise WireError(f"wire version {v!r} != {WIRE_VERSION} "
+    if v not in WIRE_COMPAT:
+        raise WireError(f"wire version {v!r} not in {WIRE_COMPAT} "
                         f"(peer speaks a different protocol)")
     kind = doc.get("kind")
+    if v < 2 and kind in _V2_KINDS:
+        raise WireError(f"v{v} envelope carries the v2-only kind "
+                        f"{kind!r} (wire drift)")
     allowed = ENVELOPE_FIELDS.get(kind)
     if allowed is None:
         raise WireError(f"unknown envelope kind {kind!r}; one of "
@@ -158,18 +168,38 @@ class Channel:
     worker that stays silent past it raises ``TimeoutError``, which the
     coordinator escalates to a pool crash."""
 
+    obs = None      # optional repro.obs.Registry for net_* wall metrics
+
     def __init__(self, sock, *, timeout_s: float | None = None):
         sock.settimeout(timeout_s)
         self._sock = sock
         self._f = sock.makefile("rwb")
 
+    def _count(self, direction: str, kind, nbytes: int = 0) -> None:
+        obs = self.obs
+        if obs is None or not obs.enabled:
+            return
+        # wall domain: what crossed this wire depends on transport and
+        # timing, never on the instruction stream
+        obs.counter("net_envelopes_total", "envelopes on the wire",
+                    "wall").inc(labels={"dir": direction,
+                                        "kind": str(kind)})
+        if nbytes:
+            obs.counter("net_bytes_total", "framed bytes sent",
+                        "wall").inc(nbytes, labels={"dir": direction})
+
     def send(self, env: dict) -> None:
         """Write one envelope and flush."""
-        write_env(self._f, env)
+        buf = pack_env(env)
+        self._f.write(buf)
+        self._f.flush()
+        self._count("out", env.get("kind"), len(buf))
 
     def recv(self) -> dict:
         """Read one envelope (blocking, up to the channel timeout)."""
-        return read_env(self._f)
+        env = read_env(self._f)
+        self._count("in", env.get("kind"))
+        return env
 
     def close(self) -> None:
         """Close the file wrapper and the underlying socket."""

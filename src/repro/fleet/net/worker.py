@@ -249,6 +249,8 @@ class WorkerServer:
         self.ex = fleet.executor
         self.ex.name = pool
         self.ex.transport = SocketTransport(chan)
+        self.chan.obs = self.ex.obs      # worker-side net_* counters ship
+        #                                  with the telemetry snapshot
 
     def _state(self) -> dict:
         f = self.fleet
@@ -289,6 +291,11 @@ class WorkerServer:
                 return
             if kind == "ping":
                 self.chan.send({"kind": "pong", "state": self._state()})
+            elif kind == "telemetry":
+                # cumulative snapshot: the coordinator's absorb() replaces
+                # the last one, so a kill loses at most this window
+                self.chan.send({"kind": "telemetry_snap",
+                                "snapshot": self.ex.obs.snapshot()})
             elif kind == "submit":
                 self._submit(env)
             elif kind in ("step", "inject"):

@@ -173,6 +173,55 @@ def serve_cnn(args) -> int:
     return 0
 
 
+class _MetricsSink:
+    """``--metrics PATH`` / ``--metrics-every K`` plumbing shared by the
+    three fleet paths.  Without ``--metrics-every`` the final registry
+    snapshot is written once (``-`` = Prometheus text on stdout, ``.json``
+    = JSON, else Prometheus text).  With it, one compact
+    ``{"step": s, "snapshot": ...}`` JSON line is appended every K steps
+    plus a final line — a replayable time series."""
+
+    def __init__(self, args):
+        self.path = getattr(args, "metrics", None)
+        self.every = getattr(args, "metrics_every", None)
+        self.registry = None      # set once the engine/router exists
+        self._started = False
+
+    def on_step(self, step: int) -> None:
+        if self.registry is None or not self.every:
+            return
+        if (step + 1) % self.every == 0:
+            self._append(step)
+
+    def _append(self, step: int) -> None:
+        import json
+
+        line = json.dumps({"step": step,
+                           "snapshot": self.registry.snapshot()},
+                          sort_keys=True)
+        if self.path == "-":
+            print(line)
+            return
+        with open(self.path, "a" if self._started else "w") as f:
+            f.write(line + "\n")
+        self._started = True
+
+    def finish(self, steps: int) -> None:
+        if self.registry is None or self.path is None:
+            return
+        if self.every:
+            self._append(steps)
+            if self.path != "-":
+                print(f"[serve] appended metric snapshots every "
+                      f"{self.every} step(s) to {self.path}")
+            return
+        from repro.obs import write_metrics
+
+        fmt = write_metrics(self.registry, self.path)
+        if self.path != "-":
+            print(f"[serve] wrote {fmt} metrics to {self.path}")
+
+
 def _parse_fleet_mix(args) -> dict[str, float]:
     """--models/--mix -> normalized {model: share} (aliases expanded).
     Malformed values are usage errors: message + exit 2 via :func:`_fail`,
@@ -247,6 +296,15 @@ def _serve_fleet_workers(args, mix, build, requests, arrivals) -> int:
     try:
         fleets = connect(procs, heartbeat_s=recovery.heartbeat_s)
         router = MultiPoolRouter(fleets, recovery=recovery)
+        sink = _MetricsSink(args)
+        sink.registry = router.obs
+
+        def collect_telemetry():
+            for ex in router.executors.values():
+                handle = getattr(ex, "_handle", None)
+                if handle is not None and handle.lost is None:
+                    handle.collect(ex)
+
         addrs = ", ".join(f"{p}={procs[p].address}" for p in pools)
         print(f"[serve] fleet {'+'.join(mix)} x {args.workers} workers "
               f"over SocketTransport ({addrs})")
@@ -269,7 +327,14 @@ def _serve_fleet_workers(args, mix, build, requests, arrivals) -> int:
                 except QueueFull:
                     refused.append(i)
             router.step()
+            if args.metrics:
+                # pull each worker's cumulative snapshot every step so a
+                # SIGKILL loses at most the last unshipped window
+                collect_telemetry()
+                sink.on_step(step)
             step += 1
+        if args.metrics:
+            collect_telemetry()
         res = router.result()
         st = res.stats
         streams = {name: list(ex.records)
@@ -280,6 +345,7 @@ def _serve_fleet_workers(args, mix, build, requests, arrivals) -> int:
         stop_workers(fleets, procs)
 
     n = len(requests)
+    sink.finish(st["steps"])
     print(f"[serve] streamed {n} request(s) over {args.workers} workers "
           f"in {st['steps']} router steps: {st['wall_s']*1e3:.0f} ms, "
           f"aggregate {st['aggregate_fps']:.2f} fps")
@@ -384,6 +450,11 @@ def serve_fleet(args) -> int:
     if args.control_interval < 1:
         _fail(f"--control-interval must be >= 1, got "
               f"{args.control_interval}")
+    if args.metrics_every is not None and not args.metrics:
+        _fail("--metrics-every needs --metrics PATH (where would the "
+              "snapshots go?)")
+    if args.metrics_every is not None and args.metrics_every < 1:
+        _fail(f"--metrics-every must be >= 1, got {args.metrics_every}")
     fault_plan = None
     if args.faults is not None:
         try:
@@ -420,6 +491,8 @@ def serve_fleet(args) -> int:
     if args.workers:
         return _serve_fleet_workers(args, mix, build, requests, arrivals)
 
+    sink = _MetricsSink(args)
+
     def attach_controller(fleet_engine):
         if not args.adapt:
             return None
@@ -442,7 +515,8 @@ def serve_fleet(args) -> int:
               f"({s['c_chips']}c+{s['p_chips']}p devices"
               + (", degenerate: both submeshes alias one device"
                  if s["degenerate"] else "") + ")")
-        res = replay(engine, requests, arrivals)
+        sink.registry = engine.executor.obs
+        res = replay(engine, requests, arrivals, on_step=sink.on_step)
         st = res.stats
         print(f"[serve] streamed {n} request(s) in {st['slots']} fleet "
               f"slots ({st['dispatches']} member dispatches): "
@@ -476,6 +550,7 @@ def serve_fleet(args) -> int:
                   f"{cs['decisions']} decisions {cs['by_kind'] or '{}'}; "
                   f"final weights {weights}")
         streams = {"pool0": engine.stream}
+        roof_src, steps_done = engine, st["slots"]
     else:
         fleets = {f"pool{p}": build()[0] for p in range(args.pools)}
         controllers = {name: attach_controller(fl)
@@ -500,7 +575,8 @@ def serve_fleet(args) -> int:
         print(f"[serve] fleet {'+'.join(mix)} x {args.pools} pools "
               f"policy={args.policy} (requests placed on the least "
               f"outstanding pool)")
-        res = replay(router, requests, arrivals)
+        sink.registry = router.obs
+        res = replay(router, requests, arrivals, on_step=sink.on_step)
         st = res.stats
         print(f"[serve] streamed {n} request(s) over {args.pools} pools "
               f"in {st['steps']} router steps: {st['wall_s']*1e3:.0f} ms, "
@@ -527,16 +603,19 @@ def serve_fleet(args) -> int:
                       f"{cs['by_kind'] or '{}'}")
         streams = {name: ex.records
                    for name, ex in router.executors.items()}
+        roof_src, steps_done = router, st["steps"]
+    sink.finish(steps_done)
     if args.trace:
         import json
 
-        from repro.fleet.trace import chrome_trace
+        from repro.fleet.trace import chrome_trace, roofline_model
 
-        doc = chrome_trace(streams)
+        doc = chrome_trace(streams, roofline=roofline_model(roof_src))
         with open(args.trace, "w") as f:
             json.dump(doc, f)
         print(f"[serve] wrote {len(doc['traceEvents'])} trace events to "
-              f"{args.trace} (open in chrome://tracing)")
+              f"{args.trace} (roofline-annotated; open in "
+              f"chrome://tracing)")
     return 0
 
 
@@ -708,7 +787,20 @@ def main(argv=None):
     fleet.add_argument("--trace", default=None, metavar="PATH",
                        help="write the executed instruction stream as "
                             "Chrome-tracing JSON to PATH (one track per "
-                            "submesh per pool; open in chrome://tracing)")
+                            "submesh per pool, roofline args on RUN "
+                            "slices, labeled bubble events; open in "
+                            "chrome://tracing)")
+    fleet.add_argument("--metrics", default=None, metavar="PATH",
+                       help="write the telemetry registry at the end of "
+                            "the run: '-' = Prometheus text on stdout, "
+                            "*.json = JSON, else Prometheus text "
+                            "(docs/observability.md)")
+    fleet.add_argument("--metrics-every", type=int, default=None,
+                       metavar="K",
+                       help="with --metrics: append one JSON snapshot "
+                            "line every K engine/router steps (a metric "
+                            "time series) instead of one final "
+                            "exposition")
     fleet.add_argument("--faults", default=None, metavar="PLAN.json",
                        help="arm a seeded FaultPlan (repro.fleet.faults) "
                             "on the executors: deterministic RUN errors, "

@@ -148,6 +148,7 @@ class Metrics:
 
     requests: list[RequestMetrics] = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
+    slots_observed: int = 0      # engine slots (or router steps) elapsed
 
     @property
     def completed(self) -> int:
@@ -230,6 +231,7 @@ class Metrics:
         lats = self.latencies_ms()
         out = {"completed": self.completed,
                "wall_s": round(self.wall_s, 6),
+               "slots_observed": self.slots_observed,
                "requests_per_s": round(len(lats) / self.wall_s, 3)
                if self.wall_s else 0.0,
                "goodput_fps": round(self.goodput_fps(), 3),
@@ -510,6 +512,9 @@ class EngineBase:
     between workloads.
     """
 
+    obs = None           # optional repro.obs.Registry (fleet wires it;
+    #                      standalone engines run uninstrumented)
+
     def __init__(self, *, max_queue: int | None = None):
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1 (got {max_queue}); "
@@ -688,7 +693,9 @@ class EngineBase:
         completions = [self._completions[r] for r in self._order
                        if r in self._completions]
         metrics = Metrics(requests=[c.metrics for c in completions],
-                          wall_s=wall)
+                          wall_s=wall,
+                          slots_observed=int(getattr(self, "_slot", 0)
+                                             or getattr(self, "_steps", 0)))
         stats = {"wall_s": wall}
         stats.update(self._extra_stats(metrics))
         return ServeResult(outputs=[c.output for c in completions],
@@ -723,7 +730,8 @@ def poisson_arrivals(n: int, rate: float = 1.0, seed: int = 0) -> list[int]:
 
 
 def replay(engine: Engine, requests: Sequence[Request | Any],
-           arrivals: Sequence[int] | None = None) -> ServeResult:
+           arrivals: Sequence[int] | None = None,
+           on_step=None) -> ServeResult:
     """Drive ``engine`` with requests arriving at the given step indices.
 
     Requests whose arrival step has passed are submitted before each step;
@@ -733,9 +741,10 @@ def replay(engine: Engine, requests: Sequence[Request | Any],
     request i refuses i+1 too), while against a fleet front end it is the
     per-member isolation: one model's full queue must not starve another
     model's traffic that arrived the same step.  Refused requests retry
-    first next step, so per-queue FIFO order is preserved.  Returns the
-    engine's final result once every request has been submitted and
-    served.
+    first next step, so per-queue FIFO order is preserved.  ``on_step``
+    (if given) fires after every engine step with the step index — the
+    periodic-telemetry hook.  Returns the engine's final result once
+    every request has been submitted and served.
     """
     arrivals = list(arrivals) if arrivals is not None else [0] * len(requests)
     if len(arrivals) != len(requests):
@@ -755,5 +764,7 @@ def replay(engine: Engine, requests: Sequence[Request | Any],
             except QueueFull:
                 refused.append(i)       # retry after the next step frees room
         engine.step()
+        if on_step is not None:
+            on_step(step)
         step += 1
     return engine.result()

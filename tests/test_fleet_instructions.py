@@ -562,8 +562,10 @@ def test_chrome_trace_tracks_and_events():
     assert {"name": "poolA"} in [e["args"] for e in meta
                                  if e["name"] == "process_name"]
     tracks = [e["args"]["name"] for e in meta if e["name"] == "thread_name"]
-    assert tracks == ["c-submesh", "p-submesh", "retire", "control"]
-    slices = [e for e in events if e["ph"] == "X"]
+    assert tracks == ["c-submesh", "p-submesh", "retire", "control",
+                      "bubbles"]
+    slices = [e for e in events if e["ph"] == "X"
+              and e["cat"] != "bubble"]
     assert len(slices) == len(records)       # every record is stamped
     assert all(e["ts"] >= 0 and e["dur"] > 0 for e in slices)
     # a RUN on a c-dominant member files under the c-submesh track (0),
@@ -609,3 +611,101 @@ def test_trace_export_cli(tmp_path, capsys):
     with pytest.raises(SystemExit) as ei:
         trace_export.main([str(cold), "-o", str(out)])
     assert ei.value.code == 2
+
+
+def test_trace_export_reports_partial_skips(tmp_path, capsys):
+    """A stream mixing stamped and compiled-only records exports the
+    stamped ones and *reports* the skip count instead of silently
+    thinning the timeline."""
+    from benchmarks import trace_export
+
+    records = _executed_stub_stream() + compile_fleet(_mk(), _reqs(4))
+    n_cold = sum(1 for r in records if r.t0 is None)
+    assert n_cold > 0
+    p = tmp_path / "mixed.json"
+    dump_stream(records, str(p), pool="pool0")
+    out = tmp_path / "trace.json"
+    assert trace_export.main([str(p), "-o", str(out)]) == 0
+    text = capsys.readouterr().out
+    assert f"skipped {n_cold} compiled-only" in text
+
+
+def test_chrome_trace_empty_and_recordless_streams():
+    doc = chrome_trace({})
+    assert doc["traceEvents"] == []
+    doc = chrome_trace({"p0": []})
+    assert all(e["ph"] == "M" for e in doc["traceEvents"])
+    json.dumps(doc)
+
+
+def test_chrome_trace_control_track_and_pool_row_order():
+    from repro.fleet.instructions import SetParam
+
+    mk = [ExecRecord(instr=SetParam(member="a", param="weight", value=2.0),
+                     slot=0, seq=0, advances=0, t0=1.0, t1=1.1),
+          ExecRecord(instr=Rebalance(theta=0.3), slot=1, seq=1,
+                     advances=0, t0=1.1, t1=1.2)]
+    # pools are assigned process rows in sorted-name order regardless of
+    # dict insertion order
+    doc = chrome_trace({"pZ": list(mk), "pA": list(mk)})
+    rows = {e["pid"]: e["args"]["name"] for e in doc["traceEvents"]
+            if e["name"] == "process_name"}
+    assert rows == {0: "pA", 1: "pZ"}
+    control = [e for e in doc["traceEvents"]
+               if e["ph"] == "X" and e["cat"] != "bubble"]
+    assert control and all(e["tid"] == 3 for e in control)
+    assert {e["cat"] for e in control} == {"SET_PARAM", "REBALANCE"}
+
+
+def test_chrome_trace_roofline_args_clamped_and_bounded():
+    recs = [
+        # 4 advances in 2 ms against a 10k fps roofline: util 0.2
+        ExecRecord(instr=Run(member="a", slots=1, core="c"), slot=0,
+                   seq=0, advances=4, t0=0.0, t1=0.002),
+        # 50 advances in 1 ms = 50k fps achieved: clamps to 1.05
+        ExecRecord(instr=Run(member="a", slots=1, core="c"), slot=1,
+                   seq=1, advances=50, t0=0.002, t1=0.003),
+        # member without pricing: no roofline args
+        ExecRecord(instr=Run(member="b", slots=1, core="p"), slot=2,
+                   seq=2, advances=1, t0=0.003, t1=0.004),
+    ]
+    doc = chrome_trace({"p0": recs}, roofline={"p0": {"a": 10_000.0}})
+    runs = [e for e in doc["traceEvents"]
+            if e["ph"] == "X" and e["cat"] == "RUN"]
+    assert len(runs) == 3
+    priced = [e for e in runs if "roofline_util" in e["args"]]
+    assert len(priced) == 2
+    for e in priced:
+        assert 0 < e["args"]["roofline_util"] <= 1.05
+        assert e["args"]["achieved_fps"] > 0
+        assert e["args"]["roofline_fps"] == 10_000.0
+    assert priced[0]["args"]["roofline_util"] == pytest.approx(0.2)
+    assert priced[1]["args"]["roofline_util"] == 1.05
+    assert "roofline_util" not in runs[2]["args"]
+
+
+def test_chrome_trace_bubble_events():
+    mk = lambda m, c, s, q: ExecRecord(  # noqa: E731
+        instr=Run(member=m, slots=1, core=c), slot=s, seq=q,
+        advances=1, t0=0.01 * s, t1=0.01 * s + 0.005)
+    recs = [mk("a", "c", 0, 0), mk("b", "p", 0, 1),
+            mk("a", "c", 1, 2), mk("a", "c", 2, 3),
+            mk("b", "p", 3, 4), mk("a", "c", 3, 5)]
+    doc = chrome_trace({"p0": recs})
+    bubbles = [e for e in doc["traceEvents"]
+               if e["ph"] == "X" and e["cat"] == "bubble"]
+    # the p submesh is idle over slots 1-2 while c runs: one bubble,
+    # labeled with the member that next RUNs on p
+    assert len(bubbles) == 1
+    b = bubbles[0]
+    assert b["tid"] == 4
+    assert b["name"] == "bubble p-submesh x2"
+    assert b["args"] == {"core": "p", "slots": [1, 2],
+                         "could_have_run": "b"}
+    assert b["dur"] > 0
+    # fully-busy streams produce no bubbles
+    busy = [mk("a", "c", s, s) for s in range(3)] + \
+           [mk("b", "p", s, 10 + s) for s in range(3)]
+    doc2 = chrome_trace({"p0": busy})
+    assert not [e for e in doc2["traceEvents"]
+                if e.get("cat") == "bubble"]

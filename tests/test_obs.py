@@ -1,0 +1,411 @@
+"""Unified telemetry (ISSUE-10): the zero-dependency metrics registry,
+Prometheus/JSON exposition, the slot/wall domain contract — slot-domain
+snapshots are a pure function of the instruction stream, so a replay
+reproduces them dict-equal, including under crash recovery — wire-v2
+telemetry shipping from real worker processes, and the serve CLI's
+--metrics flags."""
+import io
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from test_fleet import _stub_fleet  # noqa: E402
+
+from repro.fleet import (Fault, FaultInjector, FaultPlan,  # noqa: E402
+                         MultiPoolRouter, WeightedFair, stream_from_json,
+                         stream_signature, stream_to_json)
+from repro.fleet.net import wire  # noqa: E402
+from repro.obs import (Registry, parse_label_key, to_json,  # noqa: E402
+                       to_prometheus, write_metrics)
+from repro.serving import QueueFull, Request, poisson_arrivals  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# registry primitives
+# --------------------------------------------------------------------------
+def test_counter_gauge_histogram_basics():
+    reg = Registry()
+    c = reg.counter("reqs_total", "requests", "slot")
+    c.inc(labels={"pool": "p0"})
+    c.inc(2, labels={"pool": "p0"})
+    c.inc(labels={"pool": "p1"})
+    assert c.series == {"pool=p0": 3, "pool=p1": 1}
+    g = reg.gauge("depth", "queue depth", "slot")
+    g.set(5)
+    g.set(2)
+    assert g.series == {"": 2}                   # last write wins
+    h = reg.histogram("lat", "latency", bounds=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 7.0):
+        h.observe(v)
+    s = h.series[""]
+    assert s["counts"] == [1, 2, 1] and s["n"] == 4
+    assert s["sum"] == pytest.approx(8.05)
+    # same name must come back as the same metric
+    assert reg.counter("reqs_total") is c
+    with pytest.raises(ValueError, match="re-registered"):
+        reg.gauge("reqs_total")
+    with pytest.raises(ValueError, match="re-registered"):
+        reg.counter("reqs_total", domain="wall")
+    with pytest.raises(ValueError, match="unknown metric domain"):
+        reg.counter("x", domain="lunar")
+    with pytest.raises(ValueError, match="strictly"):
+        reg.histogram("bad", bounds=(1.0, 1.0))
+
+
+def test_label_canonicalization_and_limits():
+    reg = Registry()
+    c = reg.counter("c")
+    c.inc(labels={"b": "2", "a": "1"})
+    c.inc(labels={"a": "1", "b": "2"})            # same set, any order
+    assert c.series == {"a=1,b=2": 2}
+    assert parse_label_key("a=1,b=2") == {"a": "1", "b": "2"}
+    assert parse_label_key("") == {}
+    with pytest.raises(ValueError, match="may not contain"):
+        c.inc(labels={"a": "x,y"})
+    with pytest.raises(ValueError, match="may not contain"):
+        c.inc(labels={"a": "x=y"})
+
+
+def test_disabled_registry_noops_and_zero_inc_creates_no_series():
+    reg = Registry(enabled=False)
+    reg.counter("c").inc(5)
+    reg.gauge("g").set(1)
+    reg.histogram("h").observe(0.5)
+    snap = reg.snapshot()
+    assert all(not e["series"] for part in snap.values()
+               for e in part.values())
+    live = Registry()
+    live.counter("c").inc(0, labels={"pool": "p0"})
+    assert live.counter("c").series == {}        # no zero-valued series
+
+
+def test_snapshot_is_deterministic_and_json_safe():
+    def build():
+        reg = Registry()
+        reg.counter("b_total", "b", "slot").inc(labels={"z": "1"})
+        reg.counter("a_total", "a", "wall").inc(2)
+        reg.gauge("g").set(3, labels={"pool": "p1"})
+        reg.histogram("h", bounds=(1.0,)).observe(0.5)
+        return reg
+    s1, s2 = build().snapshot(), build().snapshot()
+    assert s1 == s2
+    assert json.loads(json.dumps(s1)) == s1
+    assert list(s1["counters"]) == ["a_total", "b_total"]
+    slot_only = build().snapshot(domain="slot")
+    assert list(slot_only["counters"]) == ["b_total"]
+    assert not slot_only["histograms"]           # h defaults to wall
+
+
+def test_absorb_replaces_per_source_and_merges():
+    worker = Registry()
+    worker.counter("n_total", "n", "slot").inc(3, labels={"pool": "w0"})
+    worker.histogram("h", "h", bounds=(1.0,)).observe(0.5)
+    coord = Registry()
+    coord.counter("n_total", "n", "slot").inc(labels={"pool": "co"})
+    coord.absorb(worker.snapshot(), source="w0")
+    merged = coord.snapshot()
+    assert merged["counters"]["n_total"]["series"] == {
+        "pool=co": 1, "pool=w0": 3}
+    assert merged["histograms"]["h"]["series"][""]["n"] == 1
+    # a later cumulative snapshot REPLACES the source's contribution —
+    # never double-counts
+    worker.counter("n_total").inc(2, labels={"pool": "w0"})
+    coord.absorb(worker.snapshot(), source="w0")
+    assert coord.snapshot()["counters"]["n_total"]["series"] == {
+        "pool=co": 1, "pool=w0": 5}
+    assert coord.sources == ["w0"]
+    assert coord.snapshot(sources=False)["counters"]["n_total"][
+        "series"] == {"pool=co": 1}
+
+
+# --------------------------------------------------------------------------
+# exposition
+# --------------------------------------------------------------------------
+def _sample_registry():
+    reg = Registry()
+    reg.counter("reqs_total", "requests served", "slot").inc(
+        3, labels={"pool": "p0", "model": "mbv1"})
+    reg.gauge("depth", "queue depth", "wall").set(2.5)
+    h = reg.histogram("lat_seconds", "latency", bounds=(0.1, 1.0))
+    for v in (0.05, 0.5, 3.0):
+        h.observe(v)
+    return reg
+
+
+def test_prometheus_exposition_format():
+    text = to_prometheus(_sample_registry().snapshot())
+    assert '# HELP reqs_total requests served [domain=slot]' in text
+    assert '# TYPE reqs_total counter' in text
+    assert 'reqs_total{model="mbv1",pool="p0"} 3' in text
+    assert 'depth 2.5' in text
+    # histogram buckets are cumulative with a closing +Inf
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert 'lat_seconds_count 3' in text
+    assert 'lat_seconds_sum 3.55' in text
+
+
+def test_json_exposition_and_write_metrics(tmp_path, capsys):
+    reg = _sample_registry()
+    assert json.loads(to_json(reg.snapshot())) == reg.snapshot()
+    p_json = tmp_path / "m.json"
+    assert write_metrics(reg, str(p_json)) == "json"
+    assert json.loads(p_json.read_text()) == reg.snapshot()
+    p_prom = tmp_path / "m.prom"
+    assert write_metrics(reg, str(p_prom)) == "prom"
+    assert p_prom.read_text() == to_prometheus(reg.snapshot())
+    assert write_metrics(reg, "-") == "prom"
+    assert "reqs_total" in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------------
+# the determinism contract: slot-domain metrics replay dict-equal
+# --------------------------------------------------------------------------
+def _mk_router(injector=None):
+    def pool():
+        return _stub_fleet(cores=("c", "p"), names=["a", "b"],
+                           policy=WeightedFair(), service_steps=2,
+                           max_queue=16)
+    return MultiPoolRouter({"p0": pool(), "p1": pool()},
+                           injector=injector)
+
+
+def _drive(router, reqs, arrivals, migrate_at=3):
+    order = sorted(range(len(reqs)), key=lambda i: arrivals[i])
+    nxt, step, refused = 0, 0, []
+    while nxt < len(order) or refused or router.has_work:
+        due, refused = refused, []
+        while nxt < len(order) and arrivals[order[nxt]] <= step:
+            due.append(order[nxt])
+            nxt += 1
+        for i in due:
+            try:
+                router.submit(reqs[i])
+            except QueueFull:
+                refused.append(i)
+        if (step == migrate_at and not router.dead
+                and router.executors["p1"].fleet.queued):
+            router.migrate("p1", "p0")
+        if router.has_work:
+            router.step()
+        step += 1
+
+
+def _replayed(live, reqs):
+    rt = {name: stream_from_json(stream_to_json(recs, pool=name))
+          for name, recs in live.streams().items()}
+    fresh = _mk_router()
+    fresh.replay(rt, live.placements, reqs, events=live.events)
+    assert stream_signature(fresh.stream()) == \
+        stream_signature(live.stream())
+    return fresh
+
+
+@pytest.mark.parametrize("seed", [None, 3, 11])
+def test_slot_metrics_replay_dict_equal(seed):
+    """The ISSUE-10 acceptance property: the slot-domain registry
+    snapshot of a 2-pool live run — clean, or crash-recovering under a
+    seeded fault plan — equals its replay's snapshot exactly.  Wall
+    metrics exist on the live side only and stay out of the compare."""
+    n = 12
+    arrivals = poisson_arrivals(n, rate=2.0, seed=seed or 0)
+
+    def reqs():
+        return [Request(i, model="ab"[i % 2]) for i in range(n)]
+
+    injector = None
+    if seed is not None:
+        plan = FaultPlan.generate(seed, pools=["p0", "p1"],
+                                  members=["a", "b"], n=3, max_slot=6)
+        injector = FaultInjector(plan)
+    live = _mk_router(injector=injector)
+    _drive(live, reqs(), arrivals)
+    fresh = _replayed(live, reqs())
+
+    live_slot = live.obs.snapshot(domain="slot")
+    replay_slot = fresh.obs.snapshot(domain="slot")
+    assert live_slot == replay_slot
+    # the compare is not vacuous: executed instructions were counted
+    assert live_slot["counters"]["fleet_instructions_total"]["series"]
+    assert live_slot["counters"]["router_placements_total"]["series"]
+    if seed is not None and live.events:
+        assert live_slot["counters"][
+            "router_recovery_events_total"]["series"]
+    # wall-domain values exist live (durations were observed) but are
+    # confined to their own channel
+    assert live.obs.snapshot(domain="wall")["histograms"][
+        "fleet_instr_seconds"]["series"]
+
+
+def test_fault_crash_recovery_metrics_replay_dict_equal():
+    """Pin the crash path specifically: a pool_crash fault produces
+    recovery events and retired-status churn, and the slot snapshot
+    still replays dict-equal."""
+    plan = FaultPlan(faults=(Fault(kind="pool_crash", pool="p0",
+                                   slot=2),))
+    live = _mk_router(injector=FaultInjector(plan))
+    reqs = [Request(i, model="ab"[i % 2]) for i in range(8)]
+    for r in reqs:
+        live.submit(r)
+    live.drain()
+    assert list(live.dead) == ["p0"]
+    fresh = _replayed(live, [Request(i, model="ab"[i % 2])
+                             for i in range(8)])
+    assert live.obs.snapshot(domain="slot") == \
+        fresh.obs.snapshot(domain="slot")
+    kinds = live.obs.snapshot(domain="slot")["counters"][
+        "router_recovery_events_total"]["series"]
+    assert "kind=fail" in kinds and "kind=recover" in kinds
+
+
+def test_registry_not_shared_across_runs():
+    """Live and replay routers in one process own separate registries —
+    the one-registry-per-engine rule that keeps snapshots comparable."""
+    a, b = _mk_router(), _mk_router()
+    assert a.obs is not b.obs
+    for ex in a.executors.values():
+        assert ex.obs is a.obs
+
+
+# --------------------------------------------------------------------------
+# wire v2: telemetry envelopes + version compat
+# --------------------------------------------------------------------------
+def test_wire_v2_telemetry_round_trip():
+    snap = _sample_registry().snapshot()
+    doc = wire.unpack_env(wire.pack_env(
+        {"kind": "telemetry_snap", "snapshot": snap})[4:])
+    assert doc["v"] == wire.WIRE_VERSION == 2
+    assert doc["snapshot"] == snap
+    assert wire.unpack_env(wire.pack_env({"kind": "telemetry"})[4:])[
+        "kind"] == "telemetry"
+
+
+def test_wire_v1_still_readable_but_not_with_v2_kinds():
+    body = json.dumps({"v": 1, "kind": "ping"}).encode()
+    assert wire.unpack_env(body)["kind"] == "ping"
+    drift = json.dumps({"v": 1, "kind": "telemetry"}).encode()
+    with pytest.raises(wire.WireError, match="v2-only kind"):
+        wire.unpack_env(drift)
+    with pytest.raises(wire.WireError, match="not in"):
+        wire.unpack_env(json.dumps({"v": 3, "kind": "ping"}).encode())
+
+
+def test_channel_counts_envelopes_when_instrumented():
+    class _Sock:
+        def __init__(self):
+            self.buf = io.BytesIO()
+
+        def settimeout(self, t):
+            pass
+
+        def makefile(self, mode):
+            return self.buf
+
+    chan = wire.Channel(_Sock())
+    chan.obs = Registry()
+    chan.send({"kind": "ping"})
+    chan._f.seek(0)
+    assert chan.recv()["kind"] == "ping"
+    snap = chan.obs.snapshot(domain="wall")
+    env = snap["counters"]["net_envelopes_total"]["series"]
+    assert env == {"dir=in,kind=ping": 1, "dir=out,kind=ping": 1}
+    assert snap["counters"]["net_bytes_total"]["series"][
+        "dir=out"] > 4
+
+
+# --------------------------------------------------------------------------
+# real worker processes: telemetry collection across the socket
+# --------------------------------------------------------------------------
+def test_socket_workers_ship_telemetry_and_sigkill_bounds_loss():
+    """Workers answer the wire-v2 ``telemetry`` RPC with a cumulative
+    snapshot the coordinator absorbs per source; killing a worker loses
+    at most the window since its last collect — everything already
+    shipped stays in the coordinator registry."""
+    from repro.fleet.net.coordinator import (connect, start_workers,
+                                             stop_workers)
+
+    spec = "cnn:c:2,lm:p:3:opaque"
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(os.path.dirname(os.path.dirname(
+                   os.path.abspath(__file__))), "src"),
+                os.environ.get("PYTHONPATH", "")])}
+    procs = start_workers({f"pool{i}": ["--sim", spec]
+                           for i in range(2)}, env=env)
+    fleets = connect(procs, heartbeat_s=30.0)
+    try:
+        router = MultiPoolRouter(fleets)
+        reqs = [Request(payload=i,
+                        model=("cnn" if i % 2 == 0 else "lm"))
+                for i in range(8)]
+        for r in reqs:
+            router.submit(r)
+        for _ in range(3):
+            router.step()
+        for ex in router.executors.values():
+            assert ex._handle.collect(ex) is not None
+        assert router.obs.sources == ["pool0", "pool1"]
+        instr = router.obs.snapshot(domain="slot")["counters"][
+            "fleet_instructions_total"]["series"]
+        assert any("pool=pool0" in k for k in instr)
+        assert any("pool=pool1" in k for k in instr)
+        shipped = {k: v for k, v in instr.items() if "pool=pool1" in k}
+        assert shipped
+        # coordinator-side channel accounting rode along in wall domain
+        net = router.obs.snapshot(domain="wall")["counters"][
+            "net_envelopes_total"]["series"]
+        assert net["dir=out,kind=telemetry"] == 2
+        assert net["dir=in,kind=telemetry_snap"] == 2
+
+        for _ in range(2):                  # an unshipped window...
+            router.step()
+        procs["pool1"].kill()               # ...lost with the worker
+        p1 = router.executors["pool1"]
+        assert p1._handle.collect(p1) is None       # best-effort: no raise
+        res = router.drain()
+        assert list(router.dead) == ["pool1"]
+        assert res.metrics.count("failed") == 0
+        after = {k: v for k, v in router.obs.snapshot(domain="slot")[
+            "counters"]["fleet_instructions_total"]["series"].items()
+            if "pool=pool1" in k}
+        assert after == shipped             # last shipped window survives
+    finally:
+        stop_workers(fleets, procs)
+
+
+# --------------------------------------------------------------------------
+# Metrics.summary: slots_observed
+# --------------------------------------------------------------------------
+def test_metrics_summary_reports_slots_observed():
+    fleet = _stub_fleet(cores=("c", "p"), names=["a", "b"],
+                        policy=WeightedFair(), service_steps=1)
+    for i in range(4):
+        fleet.submit(Request(i, model="ab"[i % 2]))
+    res = fleet.drain()
+    assert res.metrics.slots_observed == fleet._slot > 0
+    assert res.metrics.summary()["slots_observed"] == fleet._slot
+
+    router = _mk_router()
+    for i in range(4):
+        router.submit(Request(i, model="ab"[i % 2]))
+    rres = router.drain()
+    assert rres.metrics.slots_observed == router._steps > 0
+
+
+# --------------------------------------------------------------------------
+# serve CLI: --metrics validation
+# --------------------------------------------------------------------------
+def test_serve_fleet_rejects_bad_metrics_flags():
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit) as ei:
+        serve.main(["fleet", "--metrics-every", "4"])
+    assert ei.value.code == 2
+    with pytest.raises(SystemExit) as ei:
+        serve.main(["fleet", "--metrics", "-", "--metrics-every", "0"])
+    assert ei.value.code == 2
